@@ -1,0 +1,40 @@
+"""Beyond-paper ablation: Hadar's pluggable utility function.
+
+The paper fixes U_j = effective throughput; the framework accepts any
+non-increasing U_j.  We compare effective-throughput against
+weighted-inverse (pure SRPT-flavoured) and a deadline-step utility on the
+same trace — showing how the primal-dual machinery trades TTD against
+mean JCT under different utility choices."""
+from benchmarks.common import emit, save_json, timed
+from repro.core.hadar import HadarScheduler
+from repro.core.simulator import simulate
+from repro.core.trace import philly_trace, simulation_cluster
+from repro.core.utility import (deadline_step, effective_throughput,
+                                weighted_inverse)
+
+UTILS = {
+    "effective_throughput": effective_throughput,
+    "weighted_inverse": weighted_inverse(1000.0),
+    "deadline_24h": deadline_step(24 * 3600.0, 1000.0),
+}
+
+
+def run(n_jobs: int = 60):
+    out = {}
+    with timed() as t:
+        for name, u in UTILS.items():
+            jobs = philly_trace(n_jobs=n_jobs, seed=1)
+            res = simulate(HadarScheduler(utility=u), jobs,
+                           simulation_cluster(), round_len=360.0)
+            out[name] = {"ttd_h": res.ttd_hours, "gru": res.avg_gru(),
+                         "jct_h": res.avg_jct() / 3600,
+                         "median_h": res.median_completion() / 3600}
+    save_json("ablation_utility", out)
+    emit("ablation_utility", t.us,
+         "; ".join(f"{k}: ttd={v['ttd_h']:.1f}h jct={v['jct_h']:.1f}h"
+                   for k, v in out.items()))
+    return out
+
+
+if __name__ == "__main__":
+    run()

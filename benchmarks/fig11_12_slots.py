@@ -1,0 +1,37 @@
+"""Paper Figs. 11-12: impact of the scheduling slot time on CRU, for
+HadarE and Hadar across small and large workload mixes."""
+from benchmarks.common import emit, save_json, timed
+from repro.core.hadar import HadarScheduler
+from repro.core.hadare import simulate_hadare
+from repro.core.simulator import simulate
+from repro.core.trace import mix_jobs, testbed_cluster
+
+
+def run(slots=(45.0, 90.0, 180.0, 360.0), mixes=("M-3", "M-5", "M-10")):
+    cluster = testbed_cluster()
+    out = {"hadare": {}, "hadar": {}}
+    with timed() as t:
+        for mix in mixes:
+            out["hadare"][mix] = {}
+            out["hadar"][mix] = {}
+            for s in slots:
+                res_e = simulate_hadare(mix_jobs(mix, cluster), cluster,
+                                        round_len=s)
+                res_h = simulate(HadarScheduler(), mix_jobs(mix, cluster),
+                                 cluster, round_len=s)
+                out["hadare"][mix][s] = {"cru": res_e.avg_cru(),
+                                         "ttd_s": res_e.total_seconds}
+                out["hadar"][mix][s] = {"cru": res_h.avg_cru(),
+                                        "ttd_s": res_h.total_seconds}
+    save_json("fig11_12_slots", out)
+    best = {m: min(out["hadare"][m], key=lambda s: out["hadare"][m][s]["ttd_s"])
+            for m in mixes}
+    emit("fig11_12_slots", t.us,
+         "best hadare slot per mix: "
+         + " ".join(f"{m}={int(s)}s" for m, s in best.items())
+         + " (paper: 90s small mixes, 360s large)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Fig. 1: the 3-job motivational example (2xV100 + 3xP100 + 1xK80).
+Claim: Hadar finishes >=1 round earlier with higher utilization."""
+from benchmarks.common import emit, save_json, timed
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import GavelScheduler
+from repro.core.simulator import simulate
+from repro.core.trace import motivation_cluster, motivation_jobs
+
+
+def run():
+    with timed() as t:
+        res_h = simulate(HadarScheduler(), motivation_jobs(),
+                         motivation_cluster(), round_len=60.0)
+        res_g = simulate(GavelScheduler(), motivation_jobs(),
+                         motivation_cluster(), round_len=60.0)
+    out = {
+        "hadar": {"rounds": len(res_h.rounds), "gru": res_h.avg_gru(),
+                  "cru": res_h.avg_cru(), "ttd_s": res_h.total_seconds},
+        "gavel": {"rounds": len(res_g.rounds), "gru": res_g.avg_gru(),
+                  "cru": res_g.avg_cru(), "ttd_s": res_g.total_seconds},
+    }
+    save_json("fig1_motivation", out)
+    emit("fig1_motivation", t.us,
+         f"hadar {len(res_h.rounds)} rounds vs gavel {len(res_g.rounds)}; "
+         f"gru {res_h.avg_gru():.2f} vs {res_g.avg_gru():.2f} "
+         f"(paper: 1 round shorter; ~87% vs ~78%)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Figs. 3-4: trace-driven GRU comparison and completion CDF / TTD
+for Hadar vs Gavel vs Tiresias vs YARN-CS on the Philly-like trace, plus a
+beyond-paper load sweep (heterogeneity-awareness matters most at moderate
+load — at saturation all work-conserving schedulers converge)."""
+from benchmarks.common import emit, save_json, timed
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import (GavelScheduler, TiresiasScheduler,
+                                   YarnCSScheduler)
+from repro.core.simulator import simulate
+from repro.core.trace import philly_trace, simulation_cluster
+
+SCHEDS = {"hadar": HadarScheduler, "gavel": GavelScheduler,
+          "tiresias": TiresiasScheduler, "yarn-cs": YarnCSScheduler}
+
+
+def run(n_jobs: int = 70, load_sweep=(40, 80, 120)):
+    cluster = simulation_cluster()
+    out = {}
+    with timed() as t:
+        for name, cls in SCHEDS.items():
+            res = simulate(cls(), philly_trace(n_jobs=n_jobs, seed=1),
+                           cluster, round_len=360.0)
+            out[name] = {
+                "ttd_h": res.ttd_hours,
+                "gru": res.avg_gru(),
+                "median_completion_h": res.median_completion() / 3600,
+                "jct_h": res.avg_jct() / 3600,
+                "changed_round_frac": res.changed_round_frac(),
+                "cdf": [(round(tt / 3600, 2), round(f, 3))
+                        for tt, f in res.completion_cdf()[::5]],
+            }
+        sweep = {}
+        for n in load_sweep:
+            sweep[n] = {}
+            for name in ("hadar", "gavel"):
+                res = simulate(SCHEDS[name](), philly_trace(n_jobs=n, seed=1),
+                               cluster, round_len=360.0)
+                sweep[n][name] = {"ttd_h": res.ttd_hours,
+                                  "gru": res.avg_gru()}
+        out["load_sweep"] = sweep
+    save_json("fig3_4_trace", out)
+    speedup = out["gavel"]["ttd_h"] / out["hadar"]["ttd_h"]
+    emit("fig3_gru", t.us,
+         "gru " + " ".join(f"{k}={v['gru']:.2f}" for k, v in out.items()
+                           if k != "load_sweep"))
+    emit("fig4_ttd", t.us,
+         f"hadar {out['hadar']['ttd_h']:.1f}h, gavel "
+         f"{out['gavel']['ttd_h']:.1f}h -> {speedup:.2f}x "
+         f"(paper: 1.21x); tiresias {out['tiresias']['ttd_h']:.1f}h, "
+         f"yarn-cs {out['yarn-cs']['ttd_h']:.1f}h")
+    return out
+
+
+if __name__ == "__main__":
+    run()

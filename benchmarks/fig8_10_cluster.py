@@ -1,0 +1,62 @@
+"""Paper Figs. 8-10: CRU / TTD / JCT for Gavel vs Hadar vs HadarE across
+the seven workload mixes (M-1..M-12) on the emulated AWS and testbed
+clusters."""
+from benchmarks.common import emit, save_json, timed
+from repro.core.hadar import HadarScheduler
+from repro.core.hadare import simulate_hadare
+from repro.core.schedulers import GavelScheduler
+from repro.core.simulator import simulate
+from repro.core.trace import MIXES, aws_cluster, mix_jobs, testbed_cluster
+
+CLUSTERS = {"aws": aws_cluster, "testbed": testbed_cluster}
+
+
+def run(round_len: float = 90.0):
+    out = {}
+    with timed() as t:
+        for cname, cfac in CLUSTERS.items():
+            cluster = cfac()
+            out[cname] = {}
+            for mix in MIXES:
+                row = {}
+                for sched in ("gavel", "hadar", "hadare"):
+                    jobs = mix_jobs(mix, cluster)
+                    if sched == "hadare":
+                        res = simulate_hadare(jobs, cluster,
+                                              round_len=round_len)
+                    else:
+                        cls = (GavelScheduler if sched == "gavel"
+                               else HadarScheduler)
+                        res = simulate(cls(), jobs, cluster,
+                                       round_len=round_len)
+                    mx, mn = res.max_min_jct()
+                    row[sched] = {"ttd_s": res.total_seconds,
+                                  "cru": res.avg_cru(),
+                                  "jct_s": res.avg_jct(),
+                                  "jct_max_s": mx, "jct_min_s": mn}
+                out[cname][mix] = row
+    save_json("fig8_10_cluster", out)
+
+    def gain(c, a, b, key):
+        """mean over mixes of a[key] / b[key]."""
+        vals = [out[c][m][a][key] / max(out[c][m][b][key], 1e-9)
+                for m in MIXES]
+        return sum(vals) / len(vals)
+
+    for c in CLUSTERS:
+        emit(f"fig8_cru_{c}", t.us / 2,
+             f"hadar/gavel cru {gain(c, 'hadar', 'gavel', 'cru'):.2f}x, "
+             f"hadare/gavel {gain(c, 'hadare', 'gavel', 'cru'):.2f}x "
+             f"(paper: 1.20-1.21x, 1.56-1.62x)")
+        emit(f"fig9_ttd_{c}", t.us / 2,
+             f"gavel/hadar ttd {gain(c, 'gavel', 'hadar', 'ttd_s'):.2f}x, "
+             f"gavel/hadare {gain(c, 'gavel', 'hadare', 'ttd_s'):.2f}x "
+             f"(paper: 1.17x, 1.79-2.12x)")
+        emit(f"fig10_jct_{c}", t.us / 2,
+             f"gavel/hadare jct {gain(c, 'gavel', 'hadare', 'jct_s'):.2f}x "
+             f"(paper: 2.23-2.76x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,235 @@
+"""Deliverable (g): three-term roofline per (arch × shape) from the
+compiled dry-run artifacts (TPU v5e constants).
+
+  compute term    = FLOPs_total / (chips × peak_FLOP/s)        [s]
+  memory term     = HBM_bytes   / (chips × HBM_bw)             [s]
+  collective term = ICI_bytes_per_device / ICI_bw              [s]
+
+FLOP/byte sources — two views, both reported:
+  * HLO: compiled.cost_analysis() per-device module.  CAVEAT (measured
+    here, documented in EXPERIMENTS.md): XLA counts a while-loop body ONCE
+    regardless of trip count, so anything inside the scan-over-layers is
+    undercounted by ~n_layers.  Collectives are corrected exactly by
+    scope-splitting the HLO (entry + body × n_layers); FLOPs/bytes instead
+    use the analytic model below as the primary estimate.
+  * Analytic: parameter matmuls (2·N_active per token, ×3 for backward,
+    +1 forward for remat), attention score/value matmuls (causal-halved),
+    optimizer/weight/cache traffic for bytes.
+
+MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params for
+MoE; useful-FLOP ratio = MODEL_FLOPS / analytic_FLOPs — how much of the
+executed compute is "useful" (remat + attention overhead show up here).
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json, timed
+from repro.configs import canonical_names, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import INPUT_SHAPES
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+BYTES_PARAM = 2          # bf16 weights
+BYTES_OPT = 12           # f32 m, v, + f32 master-ish grad traffic
+
+
+def analytic_flops(cfg, shape) -> float:
+    """Total executed FLOPs across the cluster for one step."""
+    B, S = shape.global_batch, shape.seq_len
+    n_act = (cfg.active_param_count() if cfg.family == "moe"
+             else cfg.param_count())
+    if shape.kind == "train":
+        tokens = B * S
+        fwd_mult, total_mult = 1, 3          # fwd + 2x bwd
+        if cfg.remat:
+            total_mult += 1                  # rematerialized forward
+    elif shape.kind == "prefill":
+        tokens, total_mult = B * S, 1
+    else:
+        tokens, total_mult = B, 1
+    param_flops = 2.0 * n_act * tokens * total_mult
+
+    attn_flops = 0.0
+    if cfg.family not in ("ssm",):
+        ctx = S if shape.kind != "decode" else (
+            min(S, cfg.sliding_window) if (cfg.sliding_window and
+                                           shape.name == "long_500k") else S)
+        per_layer = 4.0 * cfg.n_heads * cfg.head_dim
+        if shape.kind == "decode":
+            attn = B * ctx * per_layer * cfg.n_layers
+        else:
+            attn = B * S * ctx * 0.5 * per_layer * cfg.n_layers
+        attn_flops = attn * total_mult
+    if cfg.family == "ssm":
+        # wkv state update: 2 * D_state ops per channel per token
+        attn_flops = (2.0 * cfg.n_heads * cfg.head_dim * cfg.head_dim
+                      * (B * (S if shape.kind != "decode" else 1))
+                      * cfg.n_layers * total_mult)
+    return param_flops + attn_flops
+
+
+def analytic_bytes(cfg, shape) -> float:
+    """Total HBM traffic across the cluster for one step (weights + state
+    + activations + KV cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    n = cfg.param_count()
+    d = cfg.d_model
+    if shape.kind == "train":
+        # weights fwd+bwd reads + grad write + opt read/write
+        w = n * (2 * BYTES_PARAM + BYTES_PARAM + 2 * BYTES_OPT)
+        acts = B * S * d * cfg.n_layers * 2 * 4   # checkpointed acts, rough
+        return w + acts
+    if shape.kind == "prefill":
+        return n * BYTES_PARAM + B * S * d * cfg.n_layers * 2 * 2
+    # decode: weights (active) + full cache read + state
+    n_act = (cfg.active_param_count() if cfg.family == "moe" else n)
+    cache = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        ctx = min(S, cfg.sliding_window) if (cfg.sliding_window and
+                                             shape.name == "long_500k") else S
+        cache = (2.0 * B * ctx * cfg.n_kv_heads * cfg.head_dim
+                 * BYTES_PARAM * cfg.n_layers)
+    if cfg.family in ("ssm", "hybrid"):
+        cache += (2.0 * B * cfg.n_heads * cfg.head_dim * cfg.head_dim
+                  * 4 * cfg.n_layers)
+    return n_act * BYTES_PARAM + cache
+
+
+def corrected_collective_bytes(rec: dict, cfg) -> float:
+    """entry + body x n_layers (undoes XLA's count-while-body-once)."""
+    sc = rec.get("collective_bytes_scoped")
+    if not sc:
+        return rec["collective_bytes_per_device"].get("total", 0)
+    return (sc["entry"].get("total", 0)
+            + sc["body"].get("total", 0) * cfg.n_layers)
+
+
+def analyze_record(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["chips"]
+    a_flops = analytic_flops(cfg, shape)
+    a_bytes = analytic_bytes(cfg, shape)
+    coll_dev = corrected_collective_bytes(rec, cfg)
+    compute_s = a_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = a_bytes / (chips * HBM_BW)
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    n = (cfg.active_param_count() if cfg.family == "moe"
+         else cfg.param_count())
+    model_flops = (6 if shape.kind == "train" else 2) * n * rec["tokens"]
+    hints = {
+        "compute": "raise per-chip utilization: drop remat where memory "
+                   "allows, fuse attention via the Pallas kernel, pick "
+                   "MXU-aligned tiles",
+        "memory": "cut HBM traffic: fused attention (no materialized "
+                  "scores), bf16 logits, lower optimizer precision, "
+                  "weight-stationary batching for decode",
+        "collective": "reshard so the repeated per-layer gather disappears "
+                      "(keep activations sharded through the block) or "
+                      "overlap collectives with the preceding matmul",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / a_flops,
+        "hlo_flops_per_device": rec["flops_per_device"],
+        "hlo_bytes_per_device": rec["bytes_accessed_per_device"],
+        "collective_bytes_per_device": coll_dev,
+        "hint": hints[dominant],
+        "top_collectives": rec.get("top_collectives", [])[:3],
+    }
+
+
+def run(mesh_tag: str = "pod16x16"):
+    rows = []
+    skipped = []
+    optimized = []
+    with timed() as t:
+        for arch in canonical_names():
+            for shape in INPUT_SHAPES:
+                p = os.path.join(DRYRUN_DIR,
+                                 f"{arch}__{shape}__{mesh_tag}.json")
+                if not os.path.exists(p):
+                    continue
+                rec = json.load(open(p))
+                if rec["status"] == "skipped":
+                    skipped.append((arch, shape, rec["reason"]))
+                    continue
+                if rec["status"] != "ok":
+                    continue
+                rows.append(analyze_record(rec))
+                # beyond-paper optimized variant, if recorded
+                po = os.path.join(DRYRUN_DIR,
+                                  f"{arch}__{shape}__{mesh_tag}__sp.json")
+                if os.path.exists(po):
+                    ro = json.load(open(po))
+                    if ro.get("status") == "ok":
+                        optimized.append(analyze_record(ro))
+    save_json("roofline", {"rows": rows, "skipped": skipped,
+                           "optimized": optimized})
+    _write_markdown(rows, skipped, optimized)
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    emit("roofline", t.us,
+         f"{len(rows)} pairs analyzed; dominant terms: "
+         + " ".join(f"{k}={v}" for k, v in sorted(dom.items()))
+         + f"; {len(skipped)} designed skip(s)")
+    return rows
+
+
+def _write_markdown(rows, skipped, optimized=()):
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline.md")
+    with open(path, "w") as f:
+        f.write("# Roofline (single-pod 16x16, TPU v5e constants)\n\n")
+        f.write("Terms in seconds/step; dominant term bold; useful-FLOP "
+                "ratio = MODEL_FLOPS / analytic executed FLOPs.\n\n")
+        f.write("| arch | shape | compute s | memory s | collective s | "
+                "dominant | useful ratio |\n|---|---|---|---|---|---|---|\n")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            f.write(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+                    f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+                    f"**{r['dominant']}** | {r['useful_flops_ratio']:.2f} "
+                    f"|\n")
+        f.write("\nSkipped (designed):\n")
+        for a, s, why in skipped:
+            f.write(f"* {a} × {s}: {why}\n")
+        if optimized:
+            base = {(r["arch"], r["shape"]): r for r in rows}
+            f.write("\n## Beyond-paper optimized variants (§Perf: SP for "
+                    "train/prefill, fp8 KV for decode)\n\n")
+            f.write("| arch | shape | base-dominant term | base → opt | "
+                    "gain |\n|---|---|---|---|---|\n")
+            for r in sorted(optimized,
+                            key=lambda r: (r["arch"], r["shape"])):
+                b = base.get((r["arch"], r["shape"]))
+                if not b:
+                    continue
+                # memory-dominant rows compare MEASURED HLO bytes (the
+                # analytic memory model is config-level and doesn't see
+                # fp8); others compare the dominant roofline term
+                if b["dominant"] == "memory":
+                    key = "hlo_bytes_per_device"
+                    label = "memory (HLO bytes/dev)"
+                else:
+                    key = b["dominant"] + "_s"
+                    label = b["dominant"]
+                gain = b[key] / r[key] if r[key] > 0 else float("inf")
+                f.write(f"| {r['arch']} | {r['shape']} | {label} "
+                        f"| {b[key]:.2e} → {r[key]:.2e} | {gain:.1f}x "
+                        f"|\n")
+        f.write("\nPer-row 'what would move the dominant term':\n")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            f.write(f"* {r['arch']} × {r['shape']} ({r['dominant']}): "
+                    f"{r['hint']}\n")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Benchmark entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig1 roofline   # subset
+"""
+import sys
+
+from benchmarks import (ablation_utility, fig1_motivation, fig3_4_trace,
+                        fig5_scalability, fig8_10_cluster, fig11_12_slots,
+                        roofline, table4_quality)
+
+BENCHES = {
+    "fig1": fig1_motivation.run,
+    "fig3_4": fig3_4_trace.run,
+    "fig5": fig5_scalability.run,
+    "fig8_10": fig8_10_cluster.run,
+    "fig11_12": fig11_12_slots.run,
+    "table4": table4_quality.run,
+    "roofline": roofline.run,
+    "ablation_utility": ablation_utility.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

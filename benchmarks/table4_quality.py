@@ -1,0 +1,30 @@
+"""Paper Table IV: inference quality of models trained under HadarE
+(forking + consolidation) vs Hadar (no forking) — REAL training of reduced
+models from the assigned pool on the emulated heterogeneous cluster."""
+from benchmarks.common import emit, save_json, timed
+from repro.launch.train import run_scheduled_training
+
+
+def run(archs=("llama3.2-1b", "rwkv6-7b", "whisper-tiny"),
+        target_steps: int = 36):
+    with timed() as t:
+        e = run_scheduled_training("hadare", archs=list(archs),
+                                   target_steps=target_steps, verbose=False)
+        h = run_scheduled_training("hadar", archs=list(archs),
+                                   target_steps=target_steps, verbose=False)
+    out = {"hadare": e, "hadar": h}
+    save_json("table4_quality", out)
+    rows = []
+    for a in archs:
+        le, lh = e["eval_losses"][a], h["eval_losses"][a]
+        rows.append(f"{a}: {le:.3f} vs {lh:.3f} "
+                    f"({'hadarE better' if le <= lh else 'hadar better'})")
+    emit("table4_quality", t.us,
+         f"eval CE forking-vs-not — {'; '.join(rows)}; rounds "
+         f"{e['rounds']} vs {h['rounds']}, cru {e['cru']:.2f} vs "
+         f"{h['cru']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

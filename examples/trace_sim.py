@@ -1,0 +1,38 @@
+"""Trace-driven simulation walkthrough (paper §IV): run the Philly-like
+trace under all four schedulers and print the Fig. 3/4 metrics.
+
+  PYTHONPATH=src python examples/trace_sim.py [--jobs 60]
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import (GavelScheduler, TiresiasScheduler,
+                                   YarnCSScheduler)
+from repro.core.simulator import simulate
+from repro.core.trace import philly_trace, simulation_cluster
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--round-len", type=float, default=360.0)
+    args = ap.parse_args()
+
+    cluster = simulation_cluster()
+    print(f"cluster: {len(cluster.nodes)} nodes, "
+          f"{cluster.total_gpus()} GPUs {cluster.capacity()}")
+    print(f"{'scheduler':10s} {'TTD(h)':>8s} {'GRU':>6s} {'median(h)':>10s} "
+          f"{'JCT(h)':>8s} {'restart-rounds':>14s}")
+    for cls in (HadarScheduler, GavelScheduler, TiresiasScheduler,
+                YarnCSScheduler):
+        jobs = philly_trace(n_jobs=args.jobs, seed=1)
+        res = simulate(cls(), jobs, cluster, round_len=args.round_len)
+        print(f"{res.scheduler:10s} {res.ttd_hours:8.2f} "
+              f"{res.avg_gru():6.3f} {res.median_completion()/3600:10.2f} "
+              f"{res.avg_jct()/3600:8.2f} {res.changed_round_frac():14.2f}")
+
+
+if __name__ == "__main__":
+    main()

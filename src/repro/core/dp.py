@@ -1,0 +1,205 @@
+"""Algorithm 2: DP_allocation + FIND_ALLOC — the dual subroutine.
+
+FIND_ALLOC builds candidate task-level allocations for one job:
+  * consolidated — pack all W_j tasks on the fewest servers, preferring
+    GPU types with the highest X_j^r (sorted once per job, Thm 1's
+    O(R H log H) term);
+  * non-consolidated — spread tasks across servers picking globally
+    cheapest/fastest devices; a communication cost is added per extra
+    server (paper lines 26-27).
+The candidate with minimum price-cost wins; it is accepted iff the payoff
+mu_j = U_j(f_hat - a_j) - cost is positive (lines 28-32).
+
+DP_allocation walks the queue with a select/skip branch per job,
+memoizing on (index, server-state) — the "save the result … to avoid
+recomputing the same subproblem" of the paper — and returns the subset of
+jobs + allocations maximizing total payoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.pricing import PriceState
+from repro.core.types import Alloc, Cluster, Job
+from repro.core.utility import UtilityFn
+
+# price paid per extra server spanned by a spread allocation, as a fraction
+# of the job's per-unit utility — models the parameter-sync bandwidth cost
+COMM_COST_FRAC = 0.05
+
+
+@dataclasses.dataclass
+class Candidate:
+    alloc: Alloc
+    cost: float
+    payoff: float
+    rate: float      # bottleneck iterations/sec (x_j)
+
+
+def _price_for(ps: PriceState, free: Dict, node_id: int, r: str,
+               taken: int, extra: Dict) -> float:
+    cap = 0
+    for n in ps.cluster.nodes:
+        if n.node_id == node_id:
+            cap = n.gpus.get(r, 0)
+    g = ps.gamma.get((node_id, r), 0) + extra.get((node_id, r), 0) + taken
+    return ps.price(node_id, r, cap, gamma_override=g)
+
+
+def _estimate_payoff(job: Job, alloc: Alloc, cost: float, now: float,
+                     utility: UtilityFn) -> float:
+    rate = job.bottleneck_rate(alloc)
+    if rate <= 0:
+        return -float("inf")
+    t_done = job.remaining_iters / (rate * max(1, sum(alloc.values())))
+    u = utility(job, max(now + t_done - job.arrival, 1e-9))
+    return u - cost
+
+
+def find_alloc(job: Job, free: Dict[Tuple[int, str], int], ps: PriceState,
+               now: float, utility: UtilityFn,
+               extra_gamma: Optional[Dict] = None,
+               force: bool = False) -> Optional[Candidate]:
+    """Best feasible task-level allocation for ``job`` at current prices.
+
+    ``extra_gamma`` holds device counts already claimed by jobs selected
+    earlier in the current DP branch (prices must reflect them).
+    ``force`` skips the mu_j > 0 admission gate (work-conserving backfill).
+    """
+    extra = extra_gamma or {}
+    W = job.n_workers
+    # GPU types sorted by job throughput, descending (line 23)
+    types = sorted([r for r in ps.cluster.gpu_types
+                    if job.throughput.get(r, 0) > 0],
+                   key=lambda r: -job.throughput[r])
+    if not types:
+        return None
+
+    avail = {k: free.get(k, 0) - extra.get(k, 0) for k in free}
+    candidates: List[Candidate] = []
+
+    # Candidates are generated per fastest-type *prefix* (all-of-type-1,
+    # types 1-2, 1-3, ...): the synchronization barrier (Eq. 1b) runs the
+    # whole gang at the slowest member's rate, so "8 fast + 1 slow" must
+    # compete against "8 fast" explicitly — the essence of task-level
+    # heterogeneity awareness.
+    for k in range(1, len(types) + 1):
+        allowed = types[:k]
+
+        # ---- consolidated: all tasks on one server (line 24) ------------
+        for node in ps.cluster.nodes:
+            h = node.node_id
+            total_free = sum(avail.get((h, r), 0) for r in allowed)
+            if total_free < W:
+                continue
+            alloc: Alloc = {}
+            taken: Dict[Tuple[int, str], int] = {}
+            cost = 0.0
+            need = W
+            for r in allowed:
+                while need and avail.get((h, r), 0) - taken.get((h, r), 0) > 0:
+                    cost += _price_for(ps, free, h, r, taken.get((h, r), 0),
+                                       extra)
+                    taken[(h, r)] = taken.get((h, r), 0) + 1
+                    alloc[(h, r)] = alloc.get((h, r), 0) + 1
+                    need -= 1
+            if need == 0:
+                payoff = _estimate_payoff(job, alloc, cost, now, utility)
+                candidates.append(Candidate(alloc, cost, payoff,
+                                            job.bottleneck_rate(alloc)))
+
+        # ---- non-consolidated: spread across servers (line 25) ----------
+        if job.single_node:          # HadarE copies never span nodes
+            continue
+        pool = []
+        for (h, r), c in avail.items():
+            if r not in allowed:
+                continue
+            for i in range(c):
+                p = _price_for(ps, free, h, r, i, extra)
+                pool.append((p / job.throughput[r], p, h, r))
+        pool.sort(key=lambda t: t[0])
+        if len(pool) >= W:
+            alloc2: Alloc = {}
+            cost2 = 0.0
+            for _, p, h, r in pool[:W]:
+                alloc2[(h, r)] = alloc2.get((h, r), 0) + 1
+                cost2 += p
+            n_servers = len({h for (h, _), c in alloc2.items() if c})
+            if n_servers > 1:  # communication cost (lines 26-27)
+                # scaled to the job's achievable utility under this
+                # allocation: spreading is penalized proportionally
+                u_est = _estimate_payoff(job, alloc2, 0.0, now, utility)
+                cost2 += COMM_COST_FRAC * max(u_est, 0.0) * (n_servers - 1)
+            payoff2 = _estimate_payoff(job, alloc2, cost2, now, utility)
+            candidates.append(Candidate(alloc2, cost2, payoff2,
+                                        job.bottleneck_rate(alloc2)))
+
+    if not candidates:
+        return None
+    best = max(candidates, key=lambda c: c.payoff)
+    if best.payoff <= 0 and not force:   # mu_j <= 0 -> reject (lines 29-33)
+        return None
+    return best
+
+
+def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
+                  ps: PriceState, now: float, utility: UtilityFn,
+                  max_exact: int = 64) -> Dict[int, Candidate]:
+    """Select jobs + allocations maximizing total payoff (Algorithm 2).
+
+    Exact select/skip DP with memoization for queues up to ``max_exact``;
+    longer queues are processed in payoff-sorted greedy chunks (the paper
+    handles 2048-job rounds in <7 min by incrementally allocating new jobs
+    only — same spirit)."""
+    if len(queue) > max_exact:
+        # greedy pass: highest standalone payoff first
+        order = []
+        for j in queue:
+            c = find_alloc(j, free, ps, now, utility)
+            if c:
+                # payoff *density* (per requested device): lets several
+                # small jobs beat one large one under contention
+                order.append((c.payoff / max(1, j.n_workers), j))
+        order.sort(key=lambda t: -t[0])
+        chosen: Dict[int, Candidate] = {}
+        extra: Dict = {}
+        for _, j in order:
+            c = find_alloc(j, free, ps, now, utility, extra_gamma=extra)
+            if c:
+                chosen[j.job_id] = c
+                for k, v in c.alloc.items():
+                    extra[k] = extra.get(k, 0) + v
+        return chosen
+
+    memo: Dict = {}
+
+    def key_of(extra: Dict) -> Tuple:
+        return tuple(sorted((k, v) for k, v in extra.items() if v))
+
+    def rec(idx: int, extra: Dict) -> Tuple[float, Dict[int, Candidate]]:
+        if idx >= len(queue):
+            return 0.0, {}
+        k = (idx, key_of(extra))
+        if k in memo:
+            return memo[k]
+        # branch 1: skip job (line 15)
+        best_v, best_sel = rec(idx + 1, extra)
+        # branch 2: allocate job (line 14)
+        job = queue[idx]
+        cand = find_alloc(job, free, ps, now, utility, extra_gamma=extra)
+        if cand is not None:
+            extra2 = dict(extra)
+            for kk, v in cand.alloc.items():
+                extra2[kk] = extra2.get(kk, 0) + v
+            v2, sel2 = rec(idx + 1, extra2)
+            if cand.payoff + v2 > best_v:
+                best_v = cand.payoff + v2
+                best_sel = dict(sel2)
+                best_sel[job.job_id] = cand
+        memo[k] = (best_v, best_sel)
+        return memo[k]
+
+    _, sel = rec(0, {})
+    return sel

@@ -1,0 +1,227 @@
+"""HadarE (paper §V): job forking + Job Tracker + consolidation rounds.
+
+Every job is forked into n copies on an n-node cluster (Thm 3: n copies
+maximize CRU).  Copies are registered with the Job Tracker under
+``job_ID = max_job_count * i + parent_id`` and scheduled by the unmodified
+Hadar core, constrained to one node per copy and distinct nodes among
+siblings.  After each round the tracker (1) aggregates completed steps
+across copies, (2) consolidates model parameters by steps-weighted
+averaging (real pytrees in the training driver; bookkeeping only in the
+simulator), and (3) re-splits the remaining steps across copies
+proportionally to node throughput.
+"""
+from __future__ import annotations
+
+import copy as _copy
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.core.hadar import HadarScheduler
+from repro.core.simulator import (RESTART_PENALTY, RoundRecord, SimResult,
+                                  _alloc_equal)
+from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
+
+MAX_JOB_COUNT = 10000  # paper's max_job_count in the job-ID formula
+
+
+def fork_job(job: Job, n_copies: int) -> List[Job]:
+    """Fork ``job`` into ``n_copies`` single-node copies (paper §V-A)."""
+    copies = []
+    for i in range(1, n_copies + 1):
+        c = _copy.deepcopy(job)
+        c.job_id = MAX_JOB_COUNT * i + job.job_id
+        c.parent = job.job_id
+        c.single_node = True
+        c.alloc = None
+        copies.append(c)
+    return copies
+
+
+@dataclasses.dataclass
+class TrackedJob:
+    parent: Job
+    copies: List[Job]
+
+    def live_copies(self) -> List[Job]:
+        return [] if self.parent.is_done() else self.copies
+
+
+class JobTracker:
+    """Registers forked copies, aggregates steps, owns consolidation."""
+
+    def __init__(self, n_nodes: int):
+        self.n_nodes = n_nodes
+        self.tracked: Dict[int, TrackedJob] = {}
+
+    def register(self, job: Job, n_copies: Optional[int] = None) -> List[Job]:
+        copies = fork_job(job, n_copies or self.n_nodes)
+        self.tracked[job.job_id] = TrackedJob(job, copies)
+        return copies
+
+    def aggregate_round(self, round_progress: Dict[int, float],
+                        now_start: float, round_len: float,
+                        rates: Optional[Dict[int, float]] = None) -> List[int]:
+        """round_progress: copy_id -> iterations completed this round.
+        Sums per parent (result aggregation), marks completions, and
+        mirrors the consolidated progress back onto every copy so each
+        copy's 'remaining' matches the parent's.  Completion times are
+        exact (copies finish ahead of the slot — paper §V-A 'early
+        finish').  Returns finished parent ids."""
+        finished = []
+        for tj in self.tracked.values():
+            p = tj.parent
+            if p.is_done():
+                continue
+            need_before = p.remaining_iters
+            got = sum(round_progress.get(c.job_id, 0.0) for c in tj.copies)
+            if got <= 0:
+                continue
+            p.done_iters = min(p.total_iters, p.done_iters + got)
+            for c in tj.copies:
+                c.done_iters = p.done_iters
+            if p.is_done():
+                rate_sum = sum((rates or {}).get(c.job_id, 0.0)
+                               for c in tj.copies)
+                used = (need_before / rate_sum if rate_sum > 0
+                        else round_len)
+                p.finish_time = now_start + min(round_len, used)
+                finished.append(p.job_id)
+                for c in tj.copies:
+                    c.alloc = None
+        return finished
+
+    def split_remaining(self) -> None:
+        """Assign each copy its next-round step quota proportional to its
+        current node's throughput (paper §V-B last paragraph).  Pure
+        bookkeeping in simulation; the training driver uses the quotas."""
+        for tj in self.tracked.values():
+            rem = tj.parent.remaining_iters
+            rates = []
+            for c in tj.copies:
+                r = c.bottleneck_rate(c.alloc) if c.alloc else 0.0
+                rates.append(r * (alloc_size(c.alloc) or 0))
+            tot = sum(rates)
+            for c, r in zip(tj.copies, rates):
+                c.quota = rem * (r / tot) if tot > 0 else 0.0
+
+
+def _dedupe_siblings(desired: Dict[int, Alloc], copies: List[Job],
+                     by_id: Dict[int, Job]) -> Dict[int, Alloc]:
+    """Among copies of one parent: at most one copy per node; drop the
+    slower duplicate."""
+    out: Dict[int, Alloc] = {}
+    used_nodes: Dict[int, set] = {}
+    order = sorted(desired.items(),
+                   key=lambda kv: -(by_id[kv[0]].bottleneck_rate(kv[1])
+                                    if kv[1] else 0.0))
+    for cid, alloc in order:
+        c = by_id[cid]
+        if alloc is None:
+            continue
+        nodes = set(alloc_nodes(alloc))
+        taken = used_nodes.setdefault(c.parent, set())
+        if nodes & taken:
+            continue
+        taken |= nodes
+        out[cid] = alloc
+    return out
+
+
+def simulate_hadare(jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_rounds: int = 20000,
+                    restart_penalty: float = RESTART_PENALTY,
+                    n_copies: Optional[int] = None,
+                    scheduler: Optional[HadarScheduler] = None,
+                    sync_overhead: float = 5.0) -> SimResult:
+    """Round-based HadarE simulation.  ``jobs`` are parents; metrics are
+    reported at parent granularity (SimResult.jobs == parents).
+
+    ``sync_overhead`` charges every allocated copy per round for the
+    tracker communication + model aggregation/consolidation (paper §VI-D:
+    this is what makes excessively short slot times unfavorable)."""
+    sched = scheduler or HadarScheduler()
+    tracker = JobTracker(len(cluster.nodes))
+    parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    for p in parents:
+        p.done_iters = 0.0
+        p.finish_time = None
+        p.alloc = None
+        p.restarts = 0
+    all_copies: List[Job] = []
+    by_id: Dict[int, Job] = {}
+    registered: set = set()
+    rounds: List[RoundRecord] = []
+    t = 0.0
+    n_nodes = len(cluster.nodes)
+    total_gpus = cluster.total_gpus()
+
+    for rnd in range(max_rounds):
+        if all(p.is_done() for p in parents):
+            break
+        for p in parents:
+            if p.arrival <= t and p.job_id not in registered:
+                cs = tracker.register(p, n_copies)
+                all_copies.extend(cs)
+                by_id.update({c.job_id: c for c in cs})
+                registered.add(p.job_id)
+
+        live = [c for c in all_copies if not c.is_done()]
+        t0 = time.perf_counter()
+        desired = sched.schedule(t, round_len, live, cluster)
+        desired = _dedupe_siblings(desired, live, by_id)
+        sched_s = time.perf_counter() - t0
+
+        changed = 0
+        busy_gpu_time = 0.0
+        busy_nodes = set()
+        progress: Dict[int, float] = {}
+        rates: Dict[int, float] = {}
+        for c in live:
+            new = desired.get(c.job_id)
+            penalty = 0.0
+            if not _alloc_equal(c.alloc, new):
+                changed += 1
+                if new is not None and c.alloc is not None:
+                    c.restarts += 1
+                    by_id_parent = tracker.tracked[c.parent].parent
+                    by_id_parent.restarts += 1
+                penalty = restart_penalty if new else 0.0
+            c.alloc = new
+            if not new:
+                continue
+            rate = c.bottleneck_rate(new)
+            w = alloc_size(new)
+            # every allocated copy pays the tracker sync + consolidation
+            # overhead once per round, plus any checkpoint-restart penalty
+            eff = max(0.0, round_len - penalty - sync_overhead)
+            parent = tracker.tracked[c.parent].parent
+            need = parent.remaining_iters  # copies share the parent's pool
+            iters = min(rate * w * eff, need)
+            progress[c.job_id] = iters
+            rates[c.job_id] = rate * w
+            used = penalty + (iters / (rate * w) if rate * w > 0 else 0.0)
+            busy_gpu_time += w * min(used, round_len)
+            busy_nodes.update(alloc_nodes(new))
+
+        finished = tracker.aggregate_round(progress, t, round_len, rates)
+        if finished:
+            sched.note_completion()
+        tracker.split_remaining()
+
+        n_active = sum(1 for p in parents
+                       if not p.is_done() and p.arrival <= t)
+        n_running = len({by_id[cid].parent for cid in progress})
+        rounds.append(RoundRecord(
+            t=t,
+            gru=busy_gpu_time / (total_gpus * round_len),
+            cru=len(busy_nodes) / max(1, n_nodes),
+            running=n_running,
+            waiting=n_active - n_running,
+            changed=changed,
+            sched_seconds=sched_s))
+        t += round_len
+
+    total = max((p.finish_time or t) for p in parents) if parents else 0.0
+    res = SimResult("hadare", rounds, parents, total)
+    return res

@@ -1,0 +1,81 @@
+"""The primal-dual price function (paper Eqs. 5-7) and its bookkeeping.
+
+k_h^r(gamma) = U_min^r * (U_max^r / U_min^r) ** (gamma / c_h^r)
+
+starts low enough to admit any job (k = U_min at gamma=0) and grows
+exponentially to U_max as the server fills, blocking low-utility jobs.
+alpha = max_r(1, ln(Umax/Umin)) gives the 2*alpha competitive bound
+(Theorem 2) — exposed for the property tests and the scalability bench.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.core.types import Cluster, Job
+from repro.core.utility import UtilityFn, effective_throughput
+
+
+class PriceState:
+    def __init__(self, cluster: Cluster, jobs: List[Job], horizon: float,
+                 utility: UtilityFn = effective_throughput,
+                 now: float = 0.0):
+        self.cluster = cluster
+        self.utility = utility
+        self.horizon = horizon
+        self.gamma: Dict[Tuple[int, str], int] = {}
+        self.u_max: Dict[str, float] = {}
+        self.u_min: Dict[str, float] = {}
+        self._compute_bounds(jobs, now)
+
+    # ---- Eqs. 6-7 ------------------------------------------------------
+    def _compute_bounds(self, jobs: List[Job], now: float) -> None:
+        types = self.cluster.gpu_types
+        cap_total = sum(self.cluster.capacity().values())
+        jobs = [j for j in jobs if j.throughput]
+        if not jobs:
+            for r in types:
+                self.u_max[r] = 1.0
+                self.u_min[r] = 1.0 / math.e
+            return
+        # eta: scaling factor bounding the initial dual objective; from the
+        # proof's requirement 1/eta <= t_max * sum_r w / sum_h sum_r c.
+        eta = max(cap_total / max(j.t_max() * j.n_workers, 1e-9)
+                  for j in jobs)
+        eta = max(eta, 1.0)
+        for r in types:
+            best, worst = 0.0, float("inf")
+            for j in jobs:
+                u_best = self.utility(j, max(j.t_min(), 1e-9))
+                best = max(best, u_best / max(j.n_workers, 1))
+                u_floor = self.utility(j, max(self.horizon - j.arrival,
+                                              j.t_min(), 1e-9))
+                worst = min(worst,
+                            u_floor / (j.t_max() * j.n_workers))
+            self.u_max[r] = max(best, 1e-12)
+            self.u_min[r] = max(min(worst / (4.0 * eta),
+                                    self.u_max[r] / math.e), 1e-15)
+
+    # ---- Eq. 5 ----------------------------------------------------------
+    def price(self, node_id: int, gpu_type: str, cap: int,
+              gamma_override: int = None) -> float:
+        g = (self.gamma.get((node_id, gpu_type), 0)
+             if gamma_override is None else gamma_override)
+        umax, umin = self.u_max[gpu_type], self.u_min[gpu_type]
+        return umin * (umax / umin) ** (g / max(cap, 1))
+
+    def alpha(self) -> float:
+        """Theorem 2 competitive-ratio constant."""
+        return max([1.0] + [math.log(self.u_max[r] / self.u_min[r])
+                            for r in self.u_max])
+
+    def commit(self, alloc: Dict[Tuple[int, str], int]) -> None:
+        for key, c in alloc.items():
+            self.gamma[key] = self.gamma.get(key, 0) + c
+
+    def release(self, alloc: Dict[Tuple[int, str], int]) -> None:
+        for key, c in alloc.items():
+            self.gamma[key] = max(0, self.gamma.get(key, 0) - c)
+
+    def snapshot(self) -> Tuple:
+        return tuple(sorted((k, v) for k, v in self.gamma.items() if v))

@@ -1,0 +1,231 @@
+"""Scheduler interface + the three baselines from the paper's evaluation:
+Gavel (job-level heterogeneity-aware), Tiresias (heterogeneity-unaware
+2-queue LAS), YARN-CS (FIFO capacity scheduler, non-preemptive).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import Alloc, Cluster, Job, alloc_size
+
+
+class Scheduler:
+    name = "base"
+    preemptive = True
+
+    def schedule(self, now: float, round_len: float, jobs: List[Job],
+                 cluster: Cluster) -> Dict[int, Alloc]:
+        """Return the desired allocation for every job that should run in
+        the next round (job_id -> Alloc).  Jobs absent from the map idle."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the baselines
+# ---------------------------------------------------------------------------
+
+def _free_pool(cluster: Cluster, taken: Dict) -> Dict[Tuple[int, str], int]:
+    free = {}
+    for n in cluster.nodes:
+        for r, c in n.gpus.items():
+            free[(n.node_id, r)] = c - taken.get((n.node_id, r), 0)
+    return free
+
+
+def _take(taken: Dict, alloc: Alloc) -> None:
+    for k, v in alloc.items():
+        taken[k] = taken.get(k, 0) + v
+
+
+def _single_type_alloc(cluster: Cluster, taken: Dict, gpu_type: str,
+                       count: int) -> Optional[Alloc]:
+    """Gang-allocate ``count`` GPUs of one type (consolidating on as few
+    nodes as possible)."""
+    free = _free_pool(cluster, taken)
+    if sum(c for (h, r), c in free.items() if r == gpu_type) < count:
+        return None
+    nodes = sorted(cluster.nodes,
+                   key=lambda n: -(free.get((n.node_id, gpu_type), 0)))
+    alloc: Alloc = {}
+    need = count
+    for n in nodes:
+        c = min(need, free.get((n.node_id, gpu_type), 0))
+        if c > 0:
+            alloc[(n.node_id, gpu_type)] = c
+            need -= c
+        if need == 0:
+            return alloc
+    return None
+
+
+def _any_type_alloc(cluster: Cluster, taken: Dict,
+                    count: int) -> Optional[Alloc]:
+    """Gang-allocate ``count`` GPUs of any mix of types (YARN-CS style)."""
+    free = _free_pool(cluster, taken)
+    if sum(free.values()) < count:
+        return None
+    alloc: Alloc = {}
+    need = count
+    for (h, r), c in sorted(free.items(), key=lambda kv: -kv[1]):
+        take = min(need, c)
+        if take > 0:
+            alloc[(h, r)] = take
+            need -= take
+        if need == 0:
+            return alloc
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Gavel [10] — job-level heterogeneity-aware, optimization + priority rounds
+# ---------------------------------------------------------------------------
+
+class GavelScheduler(Scheduler):
+    """Allocation matrix Y via max-min water-filling over normalized
+    throughputs, then round-based realization with priority
+    Y[j,r] / rounds_received[j,r] (paper §II, [10])."""
+
+    name = "gavel"
+
+    def __init__(self):
+        self.rounds_received: Dict[Tuple[int, str], int] = {}
+
+    @staticmethod
+    def allocation_matrix(jobs: List[Job], cluster: Cluster,
+                          iters: int = 40, step: float = 0.05) -> np.ndarray:
+        types = cluster.gpu_types
+        cap = cluster.capacity()
+        J = len(jobs)
+        Y = np.zeros((J, len(types)))
+        cap_left = np.array([float(cap[r]) for r in types])
+        frac_left = np.ones(J)
+        norm = np.array([[j.throughput.get(r, 0.0) for r in types]
+                         for j in jobs])
+        norm = norm / np.maximum(norm.max(axis=1, keepdims=True), 1e-9)
+        for _ in range(iters):
+            progress = False
+            # least-served job first -> approximate max-min fairness
+            order = np.argsort(1.0 - frac_left)
+            for ji in order:
+                if frac_left[ji] <= 1e-9:
+                    continue
+                w = jobs[ji].n_workers
+                best, best_r = -1.0, -1
+                for ri in range(len(types)):
+                    if cap_left[ri] >= step * w and norm[ji, ri] > best \
+                            and norm[ji, ri] > 0:
+                        best, best_r = norm[ji, ri], ri
+                if best_r < 0:
+                    continue
+                d = min(step, frac_left[ji], cap_left[best_r] / w)
+                Y[ji, best_r] += d
+                frac_left[ji] -= d
+                cap_left[best_r] -= d * w
+                progress = True
+            if not progress:
+                break
+        return Y
+
+    def schedule(self, now, round_len, jobs, cluster):
+        active = [j for j in jobs if not j.is_done() and j.arrival <= now]
+        if not active:
+            return {}
+        types = cluster.gpu_types
+        Y = self.allocation_matrix(active, cluster)
+        prio = []
+        for ji, j in enumerate(active):
+            for ri, r in enumerate(types):
+                if Y[ji, ri] <= 0 or j.throughput.get(r, 0) <= 0:
+                    continue
+                recv = self.rounds_received.get((j.job_id, r), 0)
+                prio.append((Y[ji, ri] / (1 + recv), j, r))
+        prio.sort(key=lambda t: -t[0])
+        taken: Dict = {}
+        out: Dict[int, Alloc] = {}
+        for _, j, r in prio:
+            if j.job_id in out:
+                continue
+            alloc = _single_type_alloc(cluster, taken, r, j.n_workers)
+            if alloc:
+                out[j.job_id] = alloc
+                _take(taken, alloc)
+                self.rounds_received[(j.job_id, r)] = \
+                    self.rounds_received.get((j.job_id, r), 0) + 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Tiresias [4] — heterogeneity-unaware, two-queue LAS (Promote disabled)
+# ---------------------------------------------------------------------------
+
+class TiresiasScheduler(Scheduler):
+    name = "tiresias"
+
+    def __init__(self, queue_threshold: float = 3600.0):
+        self.threshold = queue_threshold  # attained GPU-seconds boundary
+
+    def schedule(self, now, round_len, jobs, cluster):
+        active = [j for j in jobs if not j.is_done() and j.arrival <= now]
+        # queue 1 (low attained service) scheduled before queue 2; within a
+        # queue: least-attained-service first, FIFO tiebreak
+        q1 = [j for j in active if j.attained_service < self.threshold]
+        q2 = [j for j in active if j.attained_service >= self.threshold]
+        q1.sort(key=lambda j: (j.attained_service, j.arrival))
+        q2.sort(key=lambda j: (j.attained_service, j.arrival))
+        taken: Dict = {}
+        out: Dict[int, Alloc] = {}
+        for j in q1 + q2:
+            # heterogeneity-unaware: single type, whichever has most free
+            free = _free_pool(cluster, taken)
+            by_type: Dict[str, int] = {}
+            for (h, r), c in free.items():
+                by_type[r] = by_type.get(r, 0) + c
+            for r in sorted(by_type, key=lambda r: -by_type[r]):
+                if j.throughput.get(r, 0) <= 0:
+                    continue
+                alloc = _single_type_alloc(cluster, taken, r, j.n_workers)
+                if alloc:
+                    out[j.job_id] = alloc
+                    _take(taken, alloc)
+                    break
+        return out
+
+
+# ---------------------------------------------------------------------------
+# YARN-CS [6] — FIFO, non-preemptive, type-blind
+# ---------------------------------------------------------------------------
+
+class YarnCSScheduler(Scheduler):
+    name = "yarn-cs"
+    preemptive = False
+
+    def schedule(self, now, round_len, jobs, cluster):
+        taken: Dict = {}
+        out: Dict[int, Alloc] = {}
+        # running jobs keep their allocation (non-preemptive)
+        for j in jobs:
+            if j.alloc and not j.is_done():
+                out[j.job_id] = j.alloc
+                _take(taken, j.alloc)
+        for j in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
+            if j.is_done() or j.job_id in out or j.arrival > now:
+                continue
+            # same-type first (node-label queues), mixed as a last resort
+            alloc = None
+            free = _free_pool(cluster, taken)
+            by_type: Dict[str, int] = {}
+            for (h, r), c in free.items():
+                by_type[r] = by_type.get(r, 0) + c
+            for r in sorted(by_type, key=lambda r: -by_type[r]):
+                alloc = _single_type_alloc(cluster, taken, r, j.n_workers)
+                if alloc:
+                    break
+            if alloc is None:
+                alloc = _any_type_alloc(cluster, taken, j.n_workers)
+            if alloc:
+                out[j.job_id] = alloc
+                _take(taken, alloc)
+        return out

@@ -1,0 +1,175 @@
+"""Workload synthesis: Philly-like trace (paper §IV-A, Table II) and the
+physical-cluster workload mixes (paper §VI-B, Table III), plus the
+Gavel-style throughput table X_j^r.
+
+Throughput ratios follow the published heterogeneity observations [10]:
+ResNet-50 sees ~10x V100-vs-K80, recurrent models far less — the spread
+that makes task-level heterogeneity awareness matter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.types import Cluster, Job, Node
+
+# iterations/sec per single device, by (model, gpu type) — relative
+# magnitudes from Gavel's measurements [10]
+THROUGHPUT_TABLE: Dict[str, Dict[str, float]] = {
+    # model            V100    P100    T4     K80   TitanRTX  RTX3090 T400 A2000
+    "resnet50":    {"v100": 3.00, "p100": 1.60, "t4": 1.30, "k80": 0.30,
+                    "titanrtx": 3.20, "rtx3090": 3.60, "t400": 0.40,
+                    "a2000": 1.10},
+    "resnet18":    {"v100": 9.00, "p100": 5.40, "t4": 4.60, "k80": 1.50,
+                    "titanrtx": 9.60, "rtx3090": 10.8, "t400": 1.70,
+                    "a2000": 3.90},
+    "lstm":        {"v100": 6.00, "p100": 4.20, "t4": 3.60, "k80": 2.00,
+                    "titanrtx": 6.40, "rtx3090": 7.00, "t400": 2.10,
+                    "a2000": 3.40},
+    "cyclegan":    {"v100": 1.20, "p100": 0.65, "t4": 0.55, "k80": 0.12,
+                    "titanrtx": 1.30, "rtx3090": 1.45, "t400": 0.15,
+                    "a2000": 0.45},
+    "transformer": {"v100": 4.00, "p100": 2.40, "t4": 2.00, "k80": 0.70,
+                    "titanrtx": 4.30, "rtx3090": 4.80, "t400": 0.80,
+                    "a2000": 1.90},
+    "recorder":    {"v100": 2.20, "p100": 1.40, "t4": 1.20, "k80": 0.45,
+                    "titanrtx": 2.40, "rtx3090": 2.70, "t400": 0.50,
+                    "a2000": 1.10},
+    "mima":        {"v100": 5.00, "p100": 3.20, "t4": 2.70, "k80": 1.10,
+                    "titanrtx": 5.40, "rtx3090": 6.00, "t400": 1.20,
+                    "a2000": 2.50},
+    # A3C-like RL job: little accelerator-bound work -> small spread [10]
+    "a3c":         {"v100": 2.00, "p100": 1.60, "t4": 1.50, "k80": 1.00,
+                    "titanrtx": 2.10, "rtx3090": 2.20, "t400": 1.10,
+                    "a2000": 1.50},
+}
+
+SIZE_GPU_HOURS = {"S": (0.1, 1.0), "M": (1.0, 10.0), "L": (10.0, 50.0),
+                  "XL": (60.0, 100.0)}
+MODEL_SIZE = {"resnet50": "XL", "resnet18": "S", "lstm": "L",
+              "cyclegan": "M", "transformer": "L", "recorder": "XL",
+              "mima": "M"}
+
+
+def restrict(model: str, types: List[str]) -> Dict[str, float]:
+    return {r: THROUGHPUT_TABLE[model][r] for r in types}
+
+
+# ---------------------------------------------------------------------------
+# clusters
+# ---------------------------------------------------------------------------
+
+def simulation_cluster() -> Cluster:
+    """Paper §IV: 15 nodes, 60 GPUs — 20 each of V100/P100/K80."""
+    nodes = []
+    nid = 0
+    for r in ("v100", "p100", "k80"):
+        for _ in range(5):                      # 5 nodes x 4 GPUs = 20
+            nodes.append(Node(nid, {r: 4}))
+            nid += 1
+    return Cluster(nodes)
+
+
+def motivation_cluster() -> Cluster:
+    """Paper §II-A: 2x V100, 3x P100, 1x K80 (one GPU per node slot)."""
+    nodes = [Node(0, {"v100": 2}), Node(1, {"p100": 3}), Node(2, {"k80": 1})]
+    return Cluster(nodes)
+
+
+def aws_cluster() -> Cluster:
+    """Paper §VI-A: p3.2xlarge (V100) + 2x p2.xlarge (K80) + 2x g4dn (T4)."""
+    return Cluster([
+        Node(0, {"v100": 1}, pcie_scaling=1.0),
+        Node(1, {"k80": 1}, pcie_scaling=0.8),
+        Node(2, {"k80": 1}, pcie_scaling=0.8),
+        Node(3, {"t4": 1}, pcie_scaling=1.0),
+        Node(4, {"t4": 1}, pcie_scaling=1.0),
+    ])
+
+
+def testbed_cluster() -> Cluster:
+    """Paper §VI-A lab testbed: TitanRTX, T4, T400, RTX3090, RTX A2000."""
+    return Cluster([
+        Node(0, {"titanrtx": 1}, pcie_scaling=0.8),   # PCIe 3.0
+        Node(1, {"t4": 1}, pcie_scaling=0.8),
+        Node(2, {"t400": 1}, pcie_scaling=0.8),
+        Node(3, {"rtx3090": 1}, pcie_scaling=1.0),    # PCIe 4.0
+        Node(4, {"a2000": 1}, pcie_scaling=1.0),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+def motivation_jobs() -> List[Job]:
+    """Paper §II-A: J1 (3 GPUs, 80 epochs), J2 (2, 30), J3 (2, 50)."""
+    types = ["v100", "p100", "k80"]
+    mk = lambda jid, w, e, tp: Job(jid, 0.0, w, e, 10, tp)
+    return [
+        mk(1, 3, 80, {"v100": 1.00, "p100": 0.60, "k80": 0.10}),
+        mk(2, 2, 30, {"v100": 0.50, "p100": 0.40, "k80": 0.10}),
+        mk(3, 2, 50, {"v100": 0.80, "p100": 0.50, "k80": 0.10}),
+    ]
+
+
+def philly_trace(n_jobs: int = 480, seed: int = 0,
+                 types: Optional[List[str]] = None,
+                 all_at_start: bool = True) -> List[Job]:
+    """Synthetic Microsoft-trace-like workload (§IV-A): size classes
+    sampled uniformly, GPU demand heavy-tailed in {1,2,4,8}, models per
+    Table II, runtimes drawn from the class's GPU-hour range."""
+    rng = np.random.RandomState(seed)
+    types = types or ["v100", "p100", "k80"]
+    models = ["resnet50", "resnet18", "lstm", "cyclegan", "transformer"]
+    jobs: List[Job] = []
+    for i in range(n_jobs):
+        model = models[rng.randint(len(models))]
+        size = MODEL_SIZE[model]
+        lo, hi = SIZE_GPU_HOURS[size]
+        gpu_hours = rng.uniform(lo, hi)
+        # demand correlates with size (Philly: big jobs request many GPUs)
+        w_choices = {"S": [1, 1, 2], "M": [1, 2, 2, 4], "L": [2, 4, 4, 8],
+                     "XL": [4, 8, 8]}[size]
+        w = int(rng.choice(w_choices))
+        tp = restrict(model, types)
+        # calibrate E*N so the job takes ``gpu_hours`` on the median type
+        med = float(np.median(list(tp.values())))
+        total_iters = max(1.0, gpu_hours * 3600.0 * med)
+        arrival = 0.0 if all_at_start else float(rng.uniform(0, 3600 * 8))
+        jobs.append(Job(i, arrival, w,
+                        epochs=max(1, int(total_iters // 100)),
+                        iters_per_epoch=100,
+                        throughput=tp, model=model, size=size))
+    return jobs
+
+
+# workload mixes of §VI-B (M-1 .. M-12)
+MIXES = {
+    "M-1": ["mima"],
+    "M-3": ["transformer", "mima", "mima"],
+    "M-4": ["resnet18", "lstm", "transformer", "mima"],
+    "M-5": ["resnet18", "lstm", "transformer", "recorder", "mima"],
+    "M-8": ["resnet18", "lstm", "transformer", "recorder"] + ["mima"] * 4,
+    "M-10": ["resnet18", "lstm", "transformer", "recorder"] + ["mima"] * 6,
+    "M-12": ["resnet18", "lstm", "transformer", "recorder"] + ["mima"] * 8,
+}
+
+
+def mix_jobs(mix: str, cluster: Cluster, seed: int = 0,
+             base_epochs: int = 30) -> List[Job]:
+    """Physical-cluster workload mixes: single-GPU jobs (the paper's
+    clusters use one GPU per node) with per-model epoch counts scaled so
+    mixes finish in a few thousand seconds."""
+    rng = np.random.RandomState(seed)
+    types = cluster.gpu_types
+    jobs = []
+    epochs_by_size = {"S": 20, "M": 30, "L": 40, "XL": 50}
+    for i, model in enumerate(MIXES[mix]):
+        tp = restrict(model, types)
+        jobs.append(Job(i, 0.0, 1, epochs_by_size[MODEL_SIZE[model]],
+                        iters_per_epoch=60, throughput=tp, model=model,
+                        size=MODEL_SIZE[model]))
+    return jobs

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B,Hq,S,D); k,v: (B,Hkv,S,D) -> (B,Hq,S,D).  GQA by head
+    grouping; optional causal + sliding-window masking."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / jnp.sqrt(D)
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, Hq, S, D).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, state):
+    """r,k,v,w: (B,H,S,D); u: (H,D); state: (B,H,D,D) f32.
+    WKV6: S_t = diag(w_t) S_{t-1} + k_t^T v_t; o_t = r_t (diag(u)k_t^T v_t
+    + S_{t-1}).  Returns (out (B,H,S,D), new_state)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,D,D)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         uf[None, :, :, None] * kv + s)
+        return wt[..., :, None] * s + kv, out
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, wf))
+    new_state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), new_state
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,103 @@
+"""Chunked WKV6 Pallas kernel (the RWKV6 recurrence, TPU target).
+
+Naive WKV6 is a length-T sequential scan — hostile to the MXU.  This
+kernel processes the sequence in chunks of C tokens:
+
+  within a chunk, pairwise decay factors exp(cum_{t-1} - cum_s) (all <= 1,
+  numerically safe) turn the intra-chunk contribution into two (C,C)/(C,D)
+  matmuls; the carried (D,D) state contributes via one (C,D)x(D,D) matmul;
+  the state update is another matmul with relative decays <= 1.
+
+Grid = (B, H, T/C) with the chunk dim innermost; the f32 (D,D) state lives
+in VMEM scratch and persists across chunk iterations (TPU sequential grid).
+The updated state is emitted on the last chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+            state, *, C: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0]
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (C, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # (D,)
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))        # (C, D), <= 0
+    cum = jnp.cumsum(logw, axis=0)               # inclusive decay logs
+    cum_prev = cum - logw                        # cum_{t-1}
+
+    s_prev = state[...]                          # (D, D) = (k-dim, v-dim)
+    # inter-chunk: o_t += (r_t * P_{t-1}) @ S_prev
+    inter = (r * jnp.exp(cum_prev)) @ s_prev     # (C, Dv)
+
+    # intra-chunk: scores[t,s] = sum_d r_t k_s exp(cum_{t-1} - cum_s), s<t
+    diff = cum_prev[:, None, :] - cum[None, :, :]        # (C, C, D)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    strict = s_idx < t_idx
+    decay = jnp.where(strict[..., None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("td,sd,tsd->ts", r, k, decay)    # (C, C)
+    # u-bonus diagonal (s == t)
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)         # (C,)
+    scores = scores + jnp.diag(bonus)
+    intra = scores @ v                                    # (C, Dv)
+
+    o_ref[0, 0] = (inter + intra).astype(o_ref.dtype)
+
+    # state update: S_new = diag(P_C) S + sum_s (P_C / P_s) k_s (x) v_s
+    pc = jnp.exp(cum[-1])                                 # (D,)
+    k_scaled = k * jnp.exp(cum[-1][None, :] - cum)        # (C, D), <= 1
+    state[...] = pc[:, None] * s_prev + k_scaled.T @ v
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        sT_ref[0, 0] = state[...]
+
+
+def rwkv6_scan(r, k, v, w, u, state, chunk: int = 32,
+               interpret: bool = True):
+    """r,k,v,w: (B,H,S,D); u: (H,D); state: (B,H,D,D) f32.
+    Returns (out (B,H,S,D), new_state (B,H,D,D))."""
+    B, H, S, D = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, "pad S to the chunk size first"
+    nc = S // C
+    grid = (B, H, nc)
+    kernel = functools.partial(_kernel, C=C, nc=nc)
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, D), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct(state.shape, jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state.astype(jnp.float32))
+    return out, s_final

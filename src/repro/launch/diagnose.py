@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb diagnostics: dump the largest collectives inside the scan body
+(with shapes) for one (arch, shape) pair.
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch tinyllama-1.1b \
+      --shape train_4k
+"""
+import argparse
+import re
+
+import jax
+
+from repro.configs import get_config, get_shape
+from repro.launch.dryrun import make_step_fn
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.utils.hlo import _COLLECTIVES, _shape_bytes
+
+
+def body_collectives(hlo_text: str):
+    rows = []
+    in_entry = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if depth == 0 and s.endswith("{") and ("(" in s or
+                                               s.startswith("ENTRY")):
+            in_entry = s.startswith("ENTRY")
+            depth = 1
+            continue
+        if depth > 0:
+            depth += s.count("{") - s.count("}")
+            if depth <= 0:
+                depth = 0
+                continue
+        if " = " not in s:
+            continue
+        _, rhs = s.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if m and not re.search(rf"\b{kind}-done\b", rhs):
+                rows.append(("entry" if in_entry else "body", kind,
+                             _shape_bytes(rhs[:m.start()]), s[:200]))
+                break
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    shape = get_shape(args.shape)
+    mesh = make_production_mesh()
+    specs, shardings, meta = input_specs(cfg, shape, mesh)
+    with mesh:
+        compiled = jax.jit(make_step_fn(cfg, shape),
+                           in_shardings=shardings).lower(*specs).compile()
+    rows = body_collectives(compiled.as_text())
+    rows.sort(key=lambda r: -r[2])
+    print(f"== top collectives for {args.arch} x {args.shape} ==")
+    for scope, kind, b, snippet in rows[:args.top]:
+        print(f"[{scope}] {kind:18s} {b/2**20:10.1f} MiB  {snippet[:140]}")
+
+
+if __name__ == "__main__":
+    main()

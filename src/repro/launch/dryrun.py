@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) with
+ShapeDtypeStruct inputs — no device allocation — and record the roofline
+inputs (FLOPs, bytes, collective bytes, per-device memory).
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun --consolidate --arch tinyllama-1.1b
+
+Results append to experiments/dryrun/<arch>__<shape>__<mesh>.json.
+The two XLA_FLAGS lines above MUST stay the first statements — jax locks
+the device count on first init.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import canonical_names, get_config, get_shape
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.specs import input_specs, long_context_policy
+from repro.models.config import INPUT_SHAPES
+from repro.models.model import forward
+from repro.serve.serve_step import make_serve_step
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step
+from repro.utils.hlo import (collective_bytes, collective_bytes_by_scope,
+                             dominant_collectives)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _result_path(arch, shape, multi_pod, tag=""):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    if tag:
+        mesh_tag += f"__{tag}"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_tag}.json")
+
+
+def make_step_fn(cfg, shape):
+    if shape.kind == "train":
+        oc = OptConfig()
+        return make_train_step(cfg, oc)
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, aux = forward(params, cfg, batch)
+            return logits
+        return prefill_fn
+    from repro.launch.specs import decode_seq_axis
+    return make_serve_step(cfg,
+                           seq_sharded=decode_seq_axis(cfg, shape) is not None)
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               save: bool = True, seq_parallel: bool = False,
+               tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if seq_parallel:
+        # the "optimized" variant (§Perf): sequence parallelism for
+        # train/prefill, fp8 KV cache for decode.  (The MoE buffer pins
+        # were measured and REFUTED — see EXPERIMENTS.md §Perf — so they
+        # stay off.)
+        if shape_name in ("decode_32k", "long_500k"):
+            cfg = dataclasses.replace(cfg,
+                                      kv_cache_dtype="float8_e4m3fn")
+        else:
+            cfg = dataclasses.replace(cfg, seq_shard_axis="model")
+    shape = get_shape(shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "status": "ok", "tag": tag}
+    ok, reason = long_context_policy(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        if save:
+            with open(_result_path(arch, shape_name, multi_pod, tag),
+                      "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    args, shardings, meta = input_specs(cfg, shape, mesh)
+    fn = make_step_fn(cfg, shape)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    coll_scoped = collective_bytes_by_scope(hlo)
+    chips = mesh_chip_count(mesh)
+
+    rec.update(
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops_per_device=float(cost.get("flops", -1.0)),
+        bytes_accessed_per_device=float(cost.get("bytes accessed", -1.0)),
+        collective_bytes_per_device=coll,
+        collective_bytes_scoped=coll_scoped,
+        top_collectives=[(k, int(b)) for k, b, _ in
+                         dominant_collectives(hlo)],
+        memory_analysis={
+            "argument_size_bytes": int(mem.argument_size_in_bytes),
+            "output_size_bytes": int(mem.output_size_in_bytes),
+            "temp_size_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_size_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+        tokens=shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                     else 1),
+    )
+    print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}{' '+tag if tag else ''}: "
+          f"compile {t_compile:.1f}s, "
+          f"flops/dev {rec['flops_per_device']:.3e}, "
+          f"coll {coll.get('total', 0):.3e} B")
+    print("  memory_analysis:", rec["memory_analysis"])
+    if save:
+        with open(_result_path(arch, shape_name, multi_pod, tag), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def dryrun_consolidate(arch: str, save: bool = True) -> dict:
+    """Lower HadarE's pod-axis parameter consolidation on the 512-chip
+    mesh — proves the enhancement's collective schedules cross-pod."""
+    from repro.models import sharding as shd
+    from repro.models.model import init_params
+    from repro.train.consolidate import (pod_consolidate,
+                                         pod_consolidate_shardings)
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    params, axes = init_params(cfg, abstract=True)
+    psh = shd.param_shardings(axes, params, mesh)
+    stacked = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct((2,) + p.shape, p.dtype), params)
+    in_sh, out_sh = pod_consolidate_shardings(psh, mesh)
+    steps = jax.ShapeDtypeStruct((2,), jnp.float32)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(pod_consolidate, in_shardings=(in_sh, shd.replicated(mesh)),
+                          out_shardings=out_sh).lower(stacked, steps)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec = {"arch": arch, "shape": "consolidate", "mesh": "2x16x16",
+           "kind": "consolidate", "status": "ok",
+           "compile_s": round(time.time() - t0, 2),
+           "collective_bytes_per_device": coll,
+           "params": cfg.param_count()}
+    print(f"[dryrun] consolidate {arch}: coll {coll.get('total', 0):.3e} B")
+    if save:
+        with open(_result_path(arch, "consolidate", True), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--consolidate", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = canonical_names() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = []
+    for arch in archs:
+        if args.consolidate:
+            dryrun_consolidate(arch)
+            continue
+        for shape in shapes:
+            path = _result_path(arch, shape, args.multi_pod, args.tag)
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        continue
+            try:
+                dryrun_one(arch, shape, args.multi_pod,
+                           seq_parallel=args.seq_parallel, tag=args.tag)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                failures.append((arch, shape, str(e)[:200]))
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": "2x16x16" if args.multi_pod else "16x16",
+                               "status": "error", "error": str(e)[:2000]},
+                              f, indent=1)
+    if failures:
+        print("FAILURES:")
+        for f_ in failures:
+            print(" ", f_)
+        raise SystemExit(1)
+    print("dry-run sweep complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the ``pod`` axis
+carries cross-pod gradient all-reduce and HadarE consolidation.
+
+A function (not a module constant) so importing never touches jax device
+state; the dry-run sets XLA_FLAGS before any jax import to fake 512 host
+devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1) -> Mesh:
+    """Small mesh for tests on the host's fake devices."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def mesh_chip_count(mesh) -> int:
+    import numpy as np
+    return int(np.prod(mesh.devices.shape))

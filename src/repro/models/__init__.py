@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, ShapeConfig, INPUT_SHAPES  # noqa
+from repro.models.model import (init_params, forward, loss_fn, decode_step,  # noqa
+                                encode)
+from repro.models.cache import init_cache  # noqa

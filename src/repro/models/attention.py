@@ -1,0 +1,167 @@
+"""GQA attention: full / causal / sliding-window, train and decode paths.
+
+The XLA einsum path is the default (fusible on every backend, used by the
+dry-run); the Pallas flash kernel is selected with ``cfg.attn_impl ==
+"pallas"`` for TPU execution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attn(pf: ParamFactory, cfg: ModelConfig, tree: dict, axtree: dict,
+              layers: int, cross: bool = False):
+    """QKV + output projection params, stacked over ``layers``."""
+    L, d = layers, cfg.d_model
+    pre = "x" if cross else ""
+    pf.make(tree, axtree, f"{pre}wq", (L, d, cfg.n_heads, cfg.head_dim),
+            ("layer", "d_model", "heads", None))
+    pf.make(tree, axtree, f"{pre}wk", (L, d, cfg.n_kv_heads, cfg.head_dim),
+            ("layer", "d_model", "kv_heads", None))
+    pf.make(tree, axtree, f"{pre}wv", (L, d, cfg.n_kv_heads, cfg.head_dim),
+            ("layer", "d_model", "kv_heads", None))
+    pf.make(tree, axtree, f"{pre}wo", (L, cfg.n_heads, cfg.head_dim, d),
+            ("layer", "heads", None, "d_model"))
+    if cfg.qkv_bias:
+        pf.make(tree, axtree, f"{pre}bq", (L, cfg.n_heads, cfg.head_dim),
+                ("layer", "heads", None), init="zeros")
+        pf.make(tree, axtree, f"{pre}bk", (L, cfg.n_kv_heads, cfg.head_dim),
+                ("layer", "kv_heads", None), init="zeros")
+        pf.make(tree, axtree, f"{pre}bv", (L, cfg.n_kv_heads, cfg.head_dim),
+                ("layer", "kv_heads", None), init="zeros")
+
+
+def qkv(p: dict, x: jax.Array, cfg: ModelConfig, pre: str = ""):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}wv"])
+    if cfg.qkv_bias:
+        q = q + p[f"{pre}bq"]
+        k = k + p[f"{pre}bk"]
+        v = v + p[f"{pre}bv"]
+    return q, k, v
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,Hq,D), k: (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(D).astype(q.dtype)
+
+
+def _grouped_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,Hkv,G,Sq,Sk), v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    B, Hkv, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hkv * G, out.shape[-1])
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           mask: Optional[jax.Array]) -> jax.Array:
+    """Masked softmax attention with GQA grouping.  mask: (Sq,Sk) or
+    broadcastable to (B,1,1,Sq,Sk); True = attend."""
+    scores = _grouped_scores(q, k).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _grouped_out(probs, v)
+
+
+def causal_mask(sq: int, sk: int, window: int = 0,
+                offset: int = 0) -> jax.Array:
+    """(sq, sk) boolean mask.  ``offset`` = absolute position of query 0
+    minus position of key 0 (for caches)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= kj > (qi - window)
+    return m
+
+
+def self_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, window: int = 0,
+                   bidirectional: bool = False, pre: str = "") -> jax.Array:
+    """Training/prefill self-attention over the full sequence."""
+    q, k, v = qkv(p, x, cfg, pre)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    mask = None if bidirectional else causal_mask(S, S, window)
+    if cfg.attn_impl == "pallas" and not bidirectional:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        out = attend(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p[f"{pre}wo"])
+
+
+def cross_attention(p: dict, x: jax.Array, kv_k: jax.Array, kv_v: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["xwq"])
+    out = attend(q, kv_k.astype(q.dtype), kv_v.astype(q.dtype), None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["xwo"])
+
+
+def encoder_kv(p: dict, enc: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["xwk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["xwv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def update_cache(cache_k: jax.Array, cache_v: jax.Array, k1: jax.Array,
+                 v1: jax.Array, pos: jax.Array, seq_sharded: bool):
+    """Insert the new token's K/V at ``pos``.
+
+    When the cache's sequence dim is sharded (long_500k), use an iota/select
+    write — elementwise, shardable with zero collectives — instead of
+    dynamic_update_slice, which GSPMD handles poorly on a partitioned dim.
+    """
+    if seq_sharded:
+        S = cache_k.shape[1]
+        sel = (jnp.arange(S)[None, :, None, None] == pos)
+        new_k = jnp.where(sel, k1.astype(cache_k.dtype), cache_k)
+        new_v = jnp.where(sel, v1.astype(cache_v.dtype), cache_v)
+    else:
+        idx = (0, pos, 0, 0)
+        new_k = jax.lax.dynamic_update_slice(cache_k,
+                                             k1.astype(cache_k.dtype), idx)
+        new_v = jax.lax.dynamic_update_slice(cache_v,
+                                             v1.astype(cache_v.dtype), idx)
+    return new_k, new_v
+
+
+def decode_self_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                          cache_k: jax.Array, cache_v: jax.Array,
+                          pos: jax.Array, window: int = 0,
+                          seq_sharded: bool = False):
+    """x: (B,1,D); cache: (B,S,Hkv,Dh).  Returns (out, new_k, new_v)."""
+    q, k1, v1 = qkv(p, x, cfg)
+    posv = jnp.reshape(pos, (1, 1))
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k1 = apply_rope(k1, posv, cfg.rope_theta)
+    new_k, new_v = update_cache(cache_k, cache_v, k1, v1, pos, seq_sharded)
+    S = cache_k.shape[1]
+    kj = jnp.arange(S)[None, :]
+    mask = kj <= pos
+    if window > 0:
+        mask &= kj > (pos - window)
+    out = attend(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                 mask[:, None, :])  # fp8 caches upcast on read
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_k, new_v

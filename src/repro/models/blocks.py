@@ -1,0 +1,213 @@
+"""Per-layer blocks for every family: train/prefill and decode variants.
+
+``block_fwd(cfg)(layer_params, x, positions)`` -> (x, aux)
+``block_decode(cfg)(layer_params, cache_slice, x, pos)`` -> (x, new_cache)
+Both are scanned over the stacked layer axis by ``model.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba, moe, rwkv
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamFactory, gelu_mlp, layernorm, rmsnorm,
+                                 swiglu)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_blocks(pf: ParamFactory, cfg: ModelConfig) -> Tuple[dict, dict]:
+    tree: dict = {}
+    ax: dict = {}
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    if cfg.family == "ssm":
+        pf.make(tree, ax, "ln1", (L, d), ("layer", "d_model"), init="ones")
+        pf.make(tree, ax, "ln2", (L, d), ("layer", "d_model"), init="ones")
+        rwkv.init_rwkv(pf, cfg, tree, ax, L)
+        return tree, ax
+
+    # families with attention
+    pf.make(tree, ax, "ln1", (L, d), ("layer", "d_model"), init="ones")
+    pf.make(tree, ax, "ln2", (L, d), ("layer", "d_model"), init="ones")
+    attn.init_attn(pf, cfg, tree, ax, L)
+    if cfg.family == "encdec":
+        pf.make(tree, ax, "ln_x", (L, d), ("layer", "d_model"), init="ones")
+        pf.make(tree, ax, "lnb1", (L, d), ("layer", "d_model"), init="zeros")
+        pf.make(tree, ax, "lnb2", (L, d), ("layer", "d_model"), init="zeros")
+        pf.make(tree, ax, "lnb_x", (L, d), ("layer", "d_model"), init="zeros")
+        attn.init_attn(pf, cfg, tree, ax, L, cross=True)
+        pf.make(tree, ax, "w_in", (L, d, f), ("layer", "d_model", "d_ff"))
+        pf.make(tree, ax, "b_in", (L, f), ("layer", "d_ff"), init="zeros")
+        pf.make(tree, ax, "w_out", (L, f, d), ("layer", "d_ff", "d_model"))
+        pf.make(tree, ax, "b_out", (L, d), ("layer", "d_model"), init="zeros")
+        return tree, ax
+    if cfg.family == "moe":
+        moe.init_moe(pf, cfg, tree, ax, L)
+        return tree, ax
+    if cfg.family == "hybrid":
+        pf.make(tree, ax, "ln_pa", (L, d), ("layer", "d_model"), init="ones")
+        pf.make(tree, ax, "ln_pm", (L, d), ("layer", "d_model"), init="ones")
+        mamba.init_mamba(pf, cfg, tree, ax, L)
+    # dense / vlm / hybrid share the swiglu mlp
+    pf.make(tree, ax, "w_gate", (L, d, f), ("layer", "d_model", "d_ff"))
+    pf.make(tree, ax, "w_up", (L, d, f), ("layer", "d_model", "d_ff"))
+    pf.make(tree, ax, "w_down", (L, f, d), ("layer", "d_ff", "d_model"))
+    return tree, ax
+
+
+def init_encoder_blocks(pf: ParamFactory, cfg: ModelConfig):
+    """Whisper-style encoder: bidirectional self-attn + GELU mlp."""
+    tree: dict = {}
+    ax: dict = {}
+    L, d, f = cfg.enc_layers, cfg.d_model, cfg.d_ff
+    pf.make(tree, ax, "ln1", (L, d), ("layer", "d_model"), init="ones")
+    pf.make(tree, ax, "ln2", (L, d), ("layer", "d_model"), init="ones")
+    pf.make(tree, ax, "lnb1", (L, d), ("layer", "d_model"), init="zeros")
+    pf.make(tree, ax, "lnb2", (L, d), ("layer", "d_model"), init="zeros")
+    attn.init_attn(pf, cfg, tree, ax, L)
+    pf.make(tree, ax, "w_in", (L, d, f), ("layer", "d_model", "d_ff"))
+    pf.make(tree, ax, "b_in", (L, f), ("layer", "d_ff"), init="zeros")
+    pf.make(tree, ax, "w_out", (L, f, d), ("layer", "d_ff", "d_model"))
+    pf.make(tree, ax, "b_out", (L, d), ("layer", "d_model"), init="zeros")
+    return tree, ax
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, window: int):
+    """Returns f(layer_params, x, positions, extra) -> (x, aux)."""
+    eps = cfg.norm_eps
+
+    def dense(p, x, positions, extra):
+        h = rmsnorm(x, p["ln1"], eps)
+        x = x + attn.self_attention(p, h, cfg, positions, window)
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, jnp.zeros((), jnp.float32)
+
+    def moe_blk(p, x, positions, extra):
+        h = rmsnorm(x, p["ln1"], eps)
+        x = x + attn.self_attention(p, h, cfg, positions, window)
+        h = rmsnorm(x, p["ln2"], eps)
+        y, aux = moe.moe_ffn(p, h, cfg)
+        return x + y, aux
+
+    def ssm_blk(p, x, positions, extra):
+        B, _, d = x.shape
+        zshift = jnp.zeros((B, 1, d), x.dtype)
+        zstate = jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32)
+        h = rmsnorm(x, p["ln1"], eps)
+        y, _, _ = rwkv.time_mix(p, h, cfg, zshift, zstate, cfg.attn_impl)
+        x = x + y
+        h = rmsnorm(x, p["ln2"], eps)
+        y, _ = rwkv.channel_mix(p, h, zshift)
+        return x + y, jnp.zeros((), jnp.float32)
+
+    def hybrid(p, x, positions, extra):
+        B, _, d = x.shape
+        h = rmsnorm(x, p["ln1"], eps)
+        a = attn.self_attention(p, h, cfg, positions, window)
+        zconv = jnp.zeros((B, mamba.CONV_K - 1, mamba.d_inner(cfg)), x.dtype)
+        zssm = jnp.zeros((B, mamba.d_inner(cfg), cfg.ssm_state), jnp.float32)
+        m, _, _ = mamba.mamba_mix(p, h, cfg, zconv, zssm)
+        x = x + 0.5 * (rmsnorm(a, p["ln_pa"], eps)
+                       + rmsnorm(m, p["ln_pm"], eps))
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, jnp.zeros((), jnp.float32)
+
+    def encdec(p, x, positions, extra):
+        xk, xv = extra  # per-layer cross K/V, already sliced by scan
+        h = layernorm(x, p["ln1"], p["lnb1"], eps)
+        x = x + attn.self_attention(p, h, cfg, positions, 0)
+        h = layernorm(x, p["ln_x"], p["lnb_x"], eps)
+        x = x + attn.cross_attention(p, h, xk, xv, cfg)
+        h = layernorm(x, p["ln2"], p["lnb2"], eps)
+        x = x + gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+        return x, jnp.zeros((), jnp.float32)
+
+    return {"dense": dense, "vlm": dense, "moe": moe_blk, "ssm": ssm_blk,
+            "hybrid": hybrid, "encdec": encdec}[cfg.family]
+
+
+def encoder_block_fwd(cfg: ModelConfig):
+    eps = cfg.norm_eps
+
+    def enc(p, x, positions):
+        h = layernorm(x, p["ln1"], p["lnb1"], eps)
+        x = x + attn.self_attention(p, h, cfg, positions, 0,
+                                    bidirectional=True)
+        h = layernorm(x, p["ln2"], p["lnb2"], eps)
+        x = x + gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+        return x
+
+    return enc
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, cache in/out)
+# ---------------------------------------------------------------------------
+
+def block_decode(cfg: ModelConfig, window: int, seq_sharded: bool):
+    """Returns f(layer_params, cache_slice, x, pos) -> (x, new_cache_slice)."""
+    eps = cfg.norm_eps
+
+    def kv_attn(p, c, x, pos):
+        h = rmsnorm(x, p["ln1"], eps)
+        out, nk, nv = attn.decode_self_attention(
+            p, h, cfg, c["k"], c["v"], pos, window, seq_sharded)
+        return x + out, {"k": nk, "v": nv}
+
+    def dense(p, c, x, pos):
+        x, nc = kv_attn(p, c, x, pos)
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, nc
+
+    def moe_blk(p, c, x, pos):
+        x, nc = kv_attn(p, c, x, pos)
+        h = rmsnorm(x, p["ln2"], eps)
+        y, _ = moe.moe_ffn(p, h, cfg)
+        return x + y, nc
+
+    def ssm_blk(p, c, x, pos):
+        h = rmsnorm(x, p["ln1"], eps)
+        y, shift_t, wkv = rwkv.time_mix(p, h, cfg, c["shift_t"], c["wkv"])
+        x = x + y
+        h = rmsnorm(x, p["ln2"], eps)
+        y, shift_c = rwkv.channel_mix(p, h, c["shift_c"])
+        return x + y, {"wkv": wkv, "shift_t": shift_t, "shift_c": shift_c}
+
+    def hybrid(p, c, x, pos):
+        h = rmsnorm(x, p["ln1"], eps)
+        a, nk, nv = attn.decode_self_attention(
+            p, h, cfg, c["k"], c["v"], pos, window, seq_sharded)
+        m, nconv, nssm = mamba.mamba_mix(p, h, cfg, c["conv"], c["ssm"])
+        x = x + 0.5 * (rmsnorm(a, p["ln_pa"], eps)
+                       + rmsnorm(m, p["ln_pm"], eps))
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return x, {"k": nk, "v": nv, "conv": nconv, "ssm": nssm}
+
+    def encdec(p, c, x, pos):
+        h = layernorm(x, p["ln1"], p["lnb1"], eps)
+        out, nk, nv = attn.decode_self_attention(
+            p, h, cfg, c["k"], c["v"], pos, 0, seq_sharded)
+        x = x + out
+        h = layernorm(x, p["ln_x"], p["lnb_x"], eps)
+        x = x + attn.cross_attention(p, h, c["xk"], c["xv"], cfg)
+        h = layernorm(x, p["ln2"], p["lnb2"], eps)
+        x = x + gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+        return x, {"k": nk, "v": nv, "xk": c["xk"], "xv": c["xv"]}
+
+    return {"dense": dense, "vlm": dense, "moe": moe_blk, "ssm": ssm_blk,
+            "hybrid": hybrid, "encdec": encdec}[cfg.family]

@@ -1,0 +1,67 @@
+"""Decode-state (KV cache / SSM state) construction for every family.
+
+Every entry is stacked on a leading ``layer`` axis so the decode step can
+``lax.scan`` over layers, consuming and re-emitting the per-layer slice.
+Logical axes mirror the param factory convention; the resolver maps
+``seq`` -> ``data`` for long_500k (sequence-sharded cache, batch 1) and
+``batch`` -> (pod, data) otherwise.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba
+from repro.models.config import ModelConfig
+from repro.models.layers import _dtype
+
+
+def _kv_dtype(cfg: ModelConfig):
+    if not cfg.kv_cache_dtype:
+        return _dtype(cfg.dtype)
+    if cfg.kv_cache_dtype == "float8_e4m3fn":
+        return jnp.float8_e4m3fn
+    return _dtype(cfg.kv_cache_dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               abstract: bool = False) -> Tuple[dict, dict]:
+    dt = _dtype(cfg.dtype)
+    kvdt = _kv_dtype(cfg)
+    L, B, S = cfg.n_layers, batch, seq
+    cache: dict = {}
+    axes: dict = {}
+
+    def make(name, shape, logical, dtype=dt):
+        if abstract:
+            cache[name] = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        else:
+            cache[name] = jnp.zeros(tuple(shape), dtype)
+        axes[name] = tuple(logical)
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        kv_shape = (L, B, S, cfg.n_kv_heads, cfg.head_dim)
+        kv_axes = ("layer", "batch", "seq", "kv_heads", None)
+        make("k", kv_shape, kv_axes, kvdt)
+        make("v", kv_shape, kv_axes, kvdt)
+    if cfg.family == "encdec":
+        xshape = (L, B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+        xaxes = ("layer", "batch", None, "kv_heads", None)
+        make("xk", xshape, xaxes, kvdt)
+        make("xv", xshape, xaxes, kvdt)
+    if cfg.family == "ssm":
+        make("wkv", (L, B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+             ("layer", "batch", "heads", None, None), jnp.float32)
+        make("shift_t", (L, B, 1, cfg.d_model),
+             ("layer", "batch", None, "d_model"))
+        make("shift_c", (L, B, 1, cfg.d_model),
+             ("layer", "batch", None, "d_model"))
+    if cfg.family == "hybrid":
+        di = mamba.d_inner(cfg)
+        make("conv", (L, B, mamba.CONV_K - 1, di),
+             ("layer", "batch", None, "d_ff"))
+        make("ssm", (L, B, di, cfg.ssm_state),
+             ("layer", "batch", "d_ff", None), jnp.float32)
+    return cache, axes

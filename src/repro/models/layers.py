@@ -1,0 +1,126 @@
+"""Shared layers + the ParamFactory used by every architecture family.
+
+The factory creates a parameter tree and, in lockstep, a *logical-axis* tree
+(same structure, tuples of axis names).  The sharding resolver
+(`repro.models.sharding`) later maps logical axes -> mesh PartitionSpecs with
+divisibility fallback.  Keeping both trees in one place removes structure
+drift between params and shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+class ParamFactory:
+    """Builds (params, logical_axes) trees in lockstep.
+
+    ``abstract=True`` produces ShapeDtypeStructs instead of real arrays —
+    used by the dry-run so no host memory is ever allocated for weights.
+    """
+
+    def __init__(self, rng: jax.Array, dtype: str, abstract: bool = False):
+        self.rng = rng
+        self.dtype = _dtype(dtype)
+        self.abstract = abstract
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _split(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def make(self, tree: dict, axtree: dict, name: str, shape: Sequence[int],
+             logical: Sequence[Optional[str]], scale: Optional[float] = None,
+             init: str = "normal"):
+        assert len(shape) == len(logical), (name, shape, logical)
+        shape = tuple(int(s) for s in shape)
+        if self.abstract:
+            tree[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+        else:
+            if init == "zeros":
+                tree[name] = jnp.zeros(shape, self.dtype)
+            elif init == "ones":
+                tree[name] = jnp.ones(shape, self.dtype)
+            else:
+                if scale is None:
+                    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                    scale = 1.0 / math.sqrt(max(1, fan_in))
+                tree[name] = (scale * jax.random.normal(
+                    self._split(), shape, jnp.float32)).astype(self.dtype)
+        axtree[name] = tuple(logical)
+        return tree[name]
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]               # (...,S,1,Dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d_model: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d_model, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d_model)
+    out = np.zeros((seq, d_model), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

@@ -1,0 +1,87 @@
+"""Selective SSM (Mamba) path used by the Hymba hybrid blocks.
+
+Diagonal selective scan:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+computed with ``jax.lax.associative_scan`` over time (parallel prefix — the
+TPU-friendly formulation; no sequential dependence in the lowered HLO).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory
+
+CONV_K = 4  # depthwise causal conv kernel size
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def init_mamba(pf: ParamFactory, cfg: ModelConfig, tree: dict, axtree: dict,
+               layers: int):
+    L, d, n = layers, cfg.d_model, cfg.ssm_state
+    di = d_inner(cfg)
+    pf.make(tree, axtree, "m_in", (L, d, 2 * di), ("layer", "d_model", "d_ff"))
+    pf.make(tree, axtree, "m_conv", (L, CONV_K, di), ("layer", None, "d_ff"))
+    pf.make(tree, axtree, "m_xbc", (L, di, 2 * n + 1), ("layer", "d_ff", None))
+    pf.make(tree, axtree, "m_alog", (L, di), ("layer", "d_ff"), init="zeros")
+    pf.make(tree, axtree, "m_dtb", (L, di), ("layer", "d_ff"), init="zeros")
+    pf.make(tree, axtree, "m_d", (L, di), ("layer", "d_ff"), init="ones")
+    pf.make(tree, axtree, "m_out", (L, di, d), ("layer", "d_ff", "d_model"))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, conv_state: jax.Array):
+    """Depthwise causal conv.  x: (B,S,Di); w: (K,Di);
+    conv_state: (B,K-1,Di) = trailing inputs of the previous segment."""
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(w.shape[0]))
+    new_state = xp[:, -(w.shape[0] - 1):]
+    return out, new_state
+
+
+def _ssm_scan(a: jax.Array, bx: jax.Array, h0: jax.Array):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan.
+    a, bx: (B,S,Di,N); h0: (B,Di,N)."""
+    # fold h0 into the first element
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh, hh[:, -1]
+
+
+def mamba_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+              conv_state: jax.Array, ssm_state: jax.Array):
+    """x: (B,S,D).  Returns (out, new_conv_state, new_ssm_state)."""
+    n = cfg.ssm_state
+    xi = jnp.einsum("bsd,de->bse", x, p["m_in"])
+    xin, gate = jnp.split(xi, 2, axis=-1)                     # (B,S,Di) each
+    xc, new_conv = _causal_conv(xin, p["m_conv"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    xbc = jnp.einsum("bse,ek->bsk", xc.astype(x.dtype), p["m_xbc"])
+    B_, C_, dt = (xbc[..., :n], xbc[..., n:2 * n],
+                  xbc[..., 2 * n].astype(jnp.float32))
+    # dt: scalar per token, broadcast per-channel with a learned bias (low-
+    # rank stand-in for mamba's dt projection)
+    dt = jax.nn.softplus(dt[..., None] + p["m_dtb"].astype(jnp.float32))
+    # dt: (B,S,Di); A negative diagonal
+    A = -jnp.exp(p["m_alog"].astype(jnp.float32))             # (Di,)
+    a = jnp.exp(dt * A)[..., None]                            # (B,S,Di,1)
+    a = jnp.broadcast_to(a, (*dt.shape, n))
+    bx = (dt * xc)[..., None] * B_.astype(jnp.float32)[:, :, None, :]
+    h, new_ssm = _ssm_scan(a, bx, ssm_state.astype(jnp.float32))
+    y = jnp.einsum("bsen,bsn->bse", h, C_.astype(jnp.float32))
+    y = y + p["m_d"].astype(jnp.float32) * xc
+    y = y.astype(x.dtype) * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["m_out"])
+    return out, new_conv, new_ssm

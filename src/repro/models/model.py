@@ -1,0 +1,223 @@
+"""Model assembly: init, forward (train/prefill), loss, decode step.
+
+Layers are stacked on a leading axis and applied with ``lax.scan`` so HLO
+size stays O(1) in depth — required for the 88/94-layer dry-runs on a
+512-device host mesh.  ``jax.checkpoint`` wraps the scanned block when
+``cfg.remat`` is set.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory, _dtype, rmsnorm, layernorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng: Optional[jax.Array] = None,
+                abstract: bool = False) -> Tuple[dict, dict]:
+    """Returns (params, logical_axes) with identical tree structure."""
+    if rng is None:
+        rng = jax.random.PRNGKey(0)
+    pf = ParamFactory(rng, cfg.dtype, abstract)
+    params: dict = {}
+    axes: dict = {}
+    pf.make(params, axes, "embed", (cfg.vocab_size, cfg.d_model),
+            ("vocab", "d_model"), scale=0.02)
+    if not cfg.tie_embeddings:
+        pf.make(params, axes, "unembed", (cfg.d_model, cfg.vocab_size),
+                ("d_model", "vocab"))
+    pf.make(params, axes, "final_norm", (cfg.d_model,), ("d_model",),
+            init="ones")
+    params["blocks"], axes["blocks"] = B.init_blocks(pf, cfg)
+    if cfg.family == "encdec":
+        params["enc"], axes["enc"] = B.init_encoder_blocks(pf, cfg)
+        pf.make(params, axes, "enc_norm", (cfg.d_model,), ("d_model",),
+                init="ones")
+        pf.make(params, axes, "enc_norm_b", (cfg.d_model,), ("d_model",),
+                init="zeros")
+        pf.make(params, axes, "final_norm_b", (cfg.d_model,), ("d_model",),
+                init="zeros")
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal absolute positions, computed on the fly (decode-safe)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(1, half - 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array,
+           positions: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.rope_theta <= 0:  # absolute sinusoidal (whisper-style)
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+def _seq_constraint(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequence-parallel residual stream (§Perf): shard dim 1 (sequence)
+    over ``cfg.seq_shard_axis`` between blocks.  GSPMD then materializes
+    the Megatron-SP schedule — all-gather at the first tensor-parallel
+    matmul, reduce-scatter after the output projection — replacing the
+    baseline's per-layer full-activation all-reduces."""
+    if not cfg.seq_shard_axis:
+        return x
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(
+        x, P(U, cfg.seq_shard_axis, U))
+
+
+def _scan_blocks(cfg: ModelConfig, fn, x, stacked, *extra_stacked):
+    """Scan ``fn`` over the stacked layer axis, accumulating aux losses."""
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, layer):
+        x, aux = carry
+        lp = layer[0]
+        ex = layer[1] if len(layer) > 1 else None
+        x = _seq_constraint(x, cfg)
+        x, a = fn(lp, x, ex)
+        x = _seq_constraint(x, cfg)
+        return (x, aux + a), None
+
+    xs = (stacked,) + tuple(extra_stacked)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper) — frontend embeddings arrive pre-computed (stub)
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_seq, d_model) stubbed frame embeddings."""
+    positions = jnp.arange(frames.shape[1])
+    x = frames + _sinusoid(positions, cfg.d_model).astype(frames.dtype)
+    fn = B.encoder_block_fwd(cfg)
+
+    def body(carry, lp):
+        return fn(lp, carry, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return layernorm(x, params["enc_norm"], params["enc_norm_b"],
+                     cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward: train / prefill
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: dict,
+            window: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,V), aux_loss).  ``batch`` carries:
+      tokens (B,S) int32 — always
+      frames (B,enc_seq,D) — encdec stub frontend
+      patches (B,enc_seq,D) — vlm stub frontend (prepended to the text)
+    """
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    win = cfg.sliding_window if window is None else window
+    prefix = 0
+
+    if cfg.family == "vlm":
+        prefix = batch["patches"].shape[1]
+        positions = jnp.arange(prefix + S)
+        x = jnp.concatenate(
+            [batch["patches"].astype(_dtype(cfg.dtype)),
+             _embed(params, cfg, tokens, positions[prefix:])], axis=1)
+    else:
+        positions = jnp.arange(S)
+        x = _embed(params, cfg, tokens, positions)
+
+    fn = B.block_fwd(cfg, win)
+    if cfg.family == "encdec":
+        enc_out = encode(params, cfg, batch["frames"])
+        from repro.models.attention import encoder_kv
+
+        def with_cross(lp, x, _):
+            xk, xv = encoder_kv(lp, enc_out)
+            return fn(lp, x, positions, (xk, xv))
+
+        x, aux = _scan_blocks(cfg, with_cross, x, params["blocks"])
+    else:
+        def plain(lp, x, _):
+            return fn(lp, x, positions, None)
+
+        x, aux = _scan_blocks(cfg, plain, x, params["blocks"])
+
+    if cfg.family == "encdec":
+        x = layernorm(x, params["final_norm"], params["final_norm_b"],
+                      cfg.norm_eps)
+    else:
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if prefix:
+        x = x[:, prefix:]
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> Tuple[jax.Array, dict]:
+    """Next-token CE + MoE aux.  labels == -1 are masked."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lsm = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lsm, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode: one token against the cache
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, cache: dict, token: jax.Array,
+                pos: jax.Array, seq_sharded: bool = False,
+                window: Optional[int] = None):
+    """token: (B,) int32; pos: scalar int32.  Returns (logits (B,V),
+    new_cache).  For dense/moe/vlm families a positive window (default:
+    cfg.sliding_window) bounds the attended span — required for long_500k.
+    """
+    win = cfg.sliding_window if window is None else window
+    x = _embed(params, cfg, token[:, None], jnp.reshape(pos, (1,)))
+    fn = B.block_decode(cfg, win, seq_sharded)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(x, layer):
+        lp, csl = layer
+        x, nc = fn(lp, csl, x, pos)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    if cfg.family == "encdec":
+        x = layernorm(x, params["final_norm"], params["final_norm_b"],
+                      cfg.norm_eps)
+    else:
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0], new_cache

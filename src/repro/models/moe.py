@@ -1,0 +1,190 @@
+"""Top-k token-choice MoE with capacity, scatter dispatch / gather combine.
+
+The (E, C, D) dispatch buffer formulation compiles to scatter/gather +
+all-to-all under GSPMD.  Expert placement on the mesh is decided by the
+sharding resolver: experts shard over ``model`` when divisible (qwen3-moe:
+128/16), otherwise the expert FFN hidden dim shards (grok-1: 8 experts,
+d_ff 32768/16 — tensor-parallel experts).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory
+
+
+def init_moe(pf: ParamFactory, cfg: ModelConfig, tree: dict, axtree: dict,
+             layers: int):
+    L, d, f, E = layers, cfg.d_model, cfg.d_ff, cfg.n_experts
+    pf.make(tree, axtree, "router", (L, d, E), ("layer", "d_model", None))
+    pf.make(tree, axtree, "we_gate", (L, E, d, f),
+            ("layer", "experts", "d_model", "d_ff"))
+    pf.make(tree, axtree, "we_up", (L, E, d, f),
+            ("layer", "experts", "d_model", "d_ff"))
+    pf.make(tree, axtree, "we_down", (L, E, f, d),
+            ("layer", "experts", "d_ff", "d_model"))
+
+
+def capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(cfg.top_k, min(n_tokens, (c + 3) // 4 * 4))
+
+
+def route(logits: jax.Array, cfg: ModelConfig):
+    """logits: (N, E) -> (weights (N,K), idx (N,K), aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.top_k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * mean_e(frac_tokens_e * mean_prob_e)
+    E = cfg.n_experts
+    one = jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32)
+    frac = jnp.mean(one, axis=0)
+    mprob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mprob)
+    return topw, topi, aux
+
+
+# Below this expert count the flat (E, C_global, D) dispatch wins: few,
+# fat experts (grok-1: 8 x 32768) waste per-row capacity padding under
+# grouped routing (measured 2x collective regression), while many small
+# experts (qwen3: 128 x 1536) need the grouped form's shard-local
+# bookkeeping.  §Perf hillclimb 2, iteration 5.
+GROUPED_MIN_EXPERTS = 32
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Top-k MoE FFN; dispatch formulation chosen by expert granularity.
+
+    Coarse MoE (few, fat, tensor-parallel experts — grok-1's 8 x 32768)
+    uses the DENSE form: every expert runs on every token with masked
+    gates, scanned over experts.  Top-2-of-8 costs 4x the active FFN
+    compute (~57 s/step on the 16x16 mesh) but eliminates the dispatch
+    buffer entirely — whose replicated (E, C, D) scatter cost ~1100 s of
+    per-layer all-reduces when experts are d_ff-sharded (§Perf hillclimb
+    2, iteration 5: measured, not estimated).  Fine-grained MoE (qwen3's
+    128 x 1536) keeps scatter dispatch in the grouped form."""
+    if cfg.n_experts < GROUPED_MIN_EXPERTS:
+        return moe_ffn_dense(p, x, cfg)
+    return moe_ffn_grouped(p, x, cfg)
+
+
+def moe_ffn_dense(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Dense-all-experts with masked top-k gates (no scatter, no buffer).
+    Partial sums accumulate through the expert scan, so GSPMD emits ONE
+    activation all-reduce per layer — the dense-FFN profile."""
+    B, S, D = x.shape
+    N = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    topw, topi, aux = route(logits.reshape(N, E), cfg)
+    # dense gate matrix: topw at topi, 0 elsewhere (renormalized by route)
+    gates = jnp.zeros((N, E), jnp.float32).at[
+        jnp.arange(N)[:, None], topi].set(topw)
+    gates = gates.reshape(B, S, E).astype(x.dtype)
+
+    def body(acc, ep):
+        wg, wu, wd, g_e = ep
+        h = jnp.einsum("bsd,df->bsf", x, wg)
+        u = jnp.einsum("bsd,df->bsf", x, wu)
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+        y = jnp.einsum("bsf,fd->bsd", h, wd)
+        return acc + g_e[..., None] * y, None
+
+    acc = jnp.zeros_like(x)
+    gates_e = jnp.moveaxis(gates, -1, 0)                 # (E, B, S)
+    acc, _ = jax.lax.scan(
+        body, acc, (p["we_gate"], p["we_up"], p["we_down"], gates_e))
+    return acc, aux * cfg.router_aux_weight
+
+
+def moe_ffn_flat(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Flat (E, C_global, D) dispatch — best for few, fat experts."""
+    B, S, D = x.shape
+    N = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(N, cfg)
+    xf = x.reshape(N, D)
+    logits = jnp.einsum("nd,de->ne", xf, p["router"])
+    topw, topi, aux = route(logits, cfg)
+
+    e_idx = topi.reshape(N * K)
+    onehot = jax.nn.one_hot(e_idx, E, dtype=jnp.int32)          # (NK, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (NK,)
+    keep = (pos >= 0) & (pos < C)
+    posc = jnp.clip(pos, 0, C - 1)
+
+    xrep = jnp.repeat(xf, K, axis=0)
+    contrib = jnp.where(keep[:, None], xrep, 0).astype(x.dtype)
+    buf = jnp.zeros((E, C, D), x.dtype).at[e_idx, posc].add(contrib)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["we_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+
+    yt = yb[e_idx, posc]
+    w = (topw.reshape(N * K) * keep).astype(x.dtype)
+    out = (yt * w[:, None]).reshape(N, K, D).sum(axis=1)
+    return out.reshape(B, S, D), aux * cfg.router_aux_weight
+
+
+def moe_ffn_grouped(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    GROUPED dispatch (§Perf hillclimb, qwen3-moe): routing positions are
+    computed *per batch row* (cumsum over the row's S·K slots only), and
+    the dispatch buffer is (B, E, C_row, D) with the batch dim inheriting
+    the data sharding.  All routing bookkeeping is then shard-local; the
+    only cross-device traffic left is the buffer <-> expert-shard exchange
+    (the intrinsic all-to-all of expert parallelism).  The earlier flat
+    (E, C_global, D) formulation forced a global-token cumsum and
+    full-buffer all-reduces — 10+ GiB per layer on the 16x16 mesh."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(S, cfg)                       # per-row capacity
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    topw, topi, aux = route(logits.reshape(B * S, E), cfg)
+    topw = topw.reshape(B, S, K)
+    topi = topi.reshape(B, S, K)
+
+    # slot-major within each row: (B, S, K) -> (B, S*K)
+    e_idx = topi.reshape(B, S * K)
+    onehot = jax.nn.one_hot(e_idx, E, dtype=jnp.int32)          # (B, SK, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (B, SK)
+    keep = (pos >= 0) & (pos < C)
+    posc = jnp.clip(pos, 0, C - 1)
+
+    xrep = jnp.repeat(x, K, axis=1)                             # (B, SK, D)
+    contrib = jnp.where(keep[..., None], xrep, 0).astype(x.dtype)
+    b_idx = jnp.arange(B)[:, None] * jnp.ones((1, S * K), jnp.int32)
+    buf = jnp.zeros((B, E, C, D), x.dtype).at[b_idx, e_idx, posc].add(contrib)
+
+    if cfg.moe_expert_axis:
+        # pin the buffer: batch -> data axes (GSPMD loses batch sharding
+        # through the scatter and replicates otherwise), experts -> the
+        # expert-parallel axis.  Dispatch then becomes shard-local; only
+        # the combine psum crosses devices.
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        spec = P(cfg.batch_shard_axes or U, cfg.moe_expert_axis, U, U)
+        buf = jax.lax.with_sharding_constraint(buf, spec)
+
+    g = jnp.einsum("becd,edf->becf", buf, p["we_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["we_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("becf,efd->becd", h, p["we_down"])          # (B,E,C,D)
+    if cfg.moe_expert_axis:
+        yb = jax.lax.with_sharding_constraint(
+            yb, P(cfg.batch_shard_axes or P.UNCONSTRAINED,
+                  cfg.moe_expert_axis, P.UNCONSTRAINED, P.UNCONSTRAINED))
+
+    yt = yb[b_idx, e_idx, posc]                                 # (B, SK, D)
+    w = (topw.reshape(B, S * K) * keep).astype(x.dtype)
+    out = (yt * w[..., None]).reshape(B, S, K, D).sum(axis=2)
+    return out.astype(x.dtype), aux * cfg.router_aux_weight

@@ -1,0 +1,138 @@
+"""RWKV6 ("Finch") — data-dependent decay linear-attention block.
+
+Recurrence (per head, K = V = head_dim):
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t          (state: K x V)
+    o_t = r_t @ (diag(u) k_t^T v_t + S_{t-1})
+with w_t in (0,1) produced by a LoRA on the shifted input (the
+data-dependent decay that distinguishes v6 from v5).
+
+Train path scans over time (chunked Pallas kernel in repro.kernels.rwkv6_scan
+is the TPU hot path); decode path is a single state update -> O(1) memory in
+sequence length, which is why long_500k is native for this family.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamFactory
+
+LORA_R = 64
+
+
+def init_rwkv(pf: ParamFactory, cfg: ModelConfig, tree: dict, axtree: dict,
+              layers: int):
+    L, d, f = layers, cfg.d_model, cfg.d_ff
+    H, Dh = cfg.n_heads, cfg.head_dim
+    # time-mix interpolation anchors (r,k,v,w,g) + decay lora + bonus u
+    pf.make(tree, axtree, "mu", (L, 5, d), ("layer", None, "d_model"),
+            init="zeros")
+    pf.make(tree, axtree, "w0", (L, d), ("layer", "d_model"), init="zeros")
+    pf.make(tree, axtree, "wa", (L, d, LORA_R), ("layer", "d_model", None))
+    pf.make(tree, axtree, "wb", (L, LORA_R, d), ("layer", None, "d_model"))
+    pf.make(tree, axtree, "u", (L, H, Dh), ("layer", "heads", None),
+            init="zeros")
+    for nm in ("wr", "wk", "wv", "wg", "wo"):
+        pf.make(tree, axtree, nm, (L, d, d), ("layer", "d_model", "heads_flat"))
+    pf.make(tree, axtree, "ln_x", (L, d), ("layer", "d_model"), init="ones")
+    # channel mix
+    pf.make(tree, axtree, "mu_c", (L, 2, d), ("layer", None, "d_model"),
+            init="zeros")
+    pf.make(tree, axtree, "wk_c", (L, d, f), ("layer", "d_model", "d_ff"))
+    pf.make(tree, axtree, "wv_c", (L, f, d), ("layer", "d_ff", "d_model"))
+    pf.make(tree, axtree, "wr_c", (L, d, d), ("layer", "d_model", "heads_flat"))
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,S,D); prev: (B,1,D) last token of previous segment."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0,1).  xw: (B,S,D)."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["wa"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora.astype(jnp.float32)),
+                      p["wb"].astype(jnp.float32))
+    logw = p["w0"].astype(jnp.float32) + lora
+    return jnp.exp(-jnp.exp(logw))                     # (B,S,D) in (0,1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_scan(r, k, v, w, u, state):
+    """Reference WKV6 scan.  r,k,v: (B,S,H,Dh); w: (B,S,H,Dh) decay;
+    u: (H,Dh); state: (B,H,Dh,Dh).  Returns (out (B,S,H,Dh), new_state)."""
+    B, S, H, Dh = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                        # (B,H,Dh) each
+        kv = kt[..., :, None] * vt[..., None, :]    # (B,H,Dh,Dh)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         uf[None, :, :, None] * kv + s)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    new_state, outs = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), new_state
+
+
+def _heads(x: jax.Array, H: int, Dh: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], H, Dh)
+
+
+def _groupnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Per-head normalization of (B,S,H,Dh) then flatten."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out.reshape(*x.shape[:-2], -1) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def time_mix(p: dict, x: jax.Array, cfg: ModelConfig, shift_prev: jax.Array,
+             state: jax.Array, impl: str = "xla"):
+    """Full time-mix block.  Returns (out, last_token, new_state)."""
+    H, Dh = cfg.n_heads, cfg.head_dim
+    xs = _token_shift(x, shift_prev)
+    mu = p["mu"]
+    xr = _mix(x, xs, mu[0])
+    xk = _mix(x, xs, mu[1])
+    xv = _mix(x, xs, mu[2])
+    xw = _mix(x, xs, mu[3])
+    xg = _mix(x, xs, mu[4])
+    r = _heads(jnp.einsum("bsd,de->bse", xr, p["wr"]), H, Dh)
+    k = _heads(jnp.einsum("bsd,de->bse", xk, p["wk"]), H, Dh)
+    v = _heads(jnp.einsum("bsd,de->bse", xv, p["wv"]), H, Dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    w = _heads(_decay(p, xw), H, Dh)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        out, new_state = kops.rwkv6_scan(r, k, v, w, p["u"], state)
+    else:
+        out, new_state = wkv_scan(r, k, v, w, p["u"], state)
+    out = _groupnorm(out, p["ln_x"], cfg.norm_eps) * g
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, x[:, -1:], new_state
+
+
+def channel_mix(p: dict, x: jax.Array, shift_prev: jax.Array):
+    xs = _token_shift(x, shift_prev)
+    xk = _mix(x, xs, p["mu_c"][0])
+    xr = _mix(x, xs, p["mu_c"][1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk_c"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv_c"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_c"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    return rgate * kv, x[:, -1:]

@@ -1,0 +1,126 @@
+"""Logical-axis -> PartitionSpec resolution with divisibility fallback.
+
+Parameters carry logical axis names (from ParamFactory).  For each tensor we
+shard *one* axis over the ``model`` mesh axis, chosen by priority:
+
+    experts > heads > kv_heads > d_ff > heads_flat > vocab > d_model
+
+skipping axes whose size doesn't divide the mesh axis (e.g. grok-1's 8
+experts on model=16 fall through to d_ff -> tensor-parallel experts;
+whisper-tiny's 6 heads fall through to d_model).  Activations shard batch
+over (pod, data); long_500k (batch 1) shards the cache sequence dim over
+``data`` instead.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PARAM_PRIORITY = ("experts", "heads", "kv_heads", "d_ff", "heads_flat",
+                  "vocab", "d_model")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+# Contracting-dim ("d_model") sharding of a weight makes every consumer
+# produce partial sums -> one activation all-reduce per layer per use.
+# That only pays off when the tensor is big enough that replicating it
+# would dominate HBM; below this element count we replicate instead.
+# (Found via the tinyllama hillclimb: kv projections with 4 kv-heads fell
+# through to d_model and cost 4x64 MiB of per-layer gathers.)
+D_MODEL_SHARD_MIN_ELEMS = 2 ** 23
+
+
+def param_pspec(logical, shape, mesh: Mesh, model_axis: str = "model") -> P:
+    spec = [None] * len(shape)
+    if model_axis in mesh.axis_names:
+        size = _axis_size(mesh, model_axis)
+        nelems = 1
+        for ax, s in zip(logical, shape):
+            if ax != "layer":          # per-layer size, not stacked size
+                nelems *= max(1, s)
+        for cand in PARAM_PRIORITY:
+            if cand in logical:
+                if (cand == "d_model"
+                        and nelems < D_MODEL_SHARD_MIN_ELEMS):
+                    continue
+                i = logical.index(cand)
+                if shape[i] % size == 0 and shape[i] > 0:
+                    spec[i] = model_axis
+                    break
+    return P(*spec)
+
+
+def param_shardings(axes_tree, abstract_params, mesh: Mesh):
+    """axes_tree mirrors abstract_params (ShapeDtypeStructs or arrays)."""
+    def resolve(ax, p):
+        return NamedSharding(mesh, param_pspec(ax, p.shape, mesh))
+
+    return jax.tree.map(resolve, axes_tree, abstract_params,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axes) -> Optional[tuple]:
+    if not axes:
+        return None
+    total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    return axes if n % total == 0 else None
+
+
+def data_pspec(shape, mesh: Mesh, seq_dim: Optional[int] = None) -> P:
+    """Shard dim0 (batch) over (pod, data); optionally a seq dim instead."""
+    spec = [None] * len(shape)
+    ba = _div(shape[0], mesh, batch_axes(mesh))
+    if ba:
+        spec[0] = ba if len(ba) > 1 else ba[0]
+    elif seq_dim is not None and "data" in mesh.axis_names \
+            and shape[seq_dim] % _axis_size(mesh, "data") == 0:
+        spec[seq_dim] = "data"
+    return P(*spec)
+
+
+def cache_pspec(logical, shape, mesh: Mesh, seq_axis=None) -> P:
+    """Cache entries: (layer, batch, [seq], heads-ish, ...).
+
+    ``seq_axis``: mesh axis for the cache's sequence dim — "data" for
+    long_500k (batch 1), "model" for ordinary decode when kv_heads doesn't
+    divide the model axis (true for EVERY GQA arch in the pool on a
+    16-wide axis; without it the whole cache replicates across the model
+    axis — found in the qwen2.5 decode hillclimb: 68 GB/device)."""
+    spec = [None] * len(shape)
+    for i, ax in enumerate(logical):
+        if ax == "batch" and seq_axis != "data":
+            ba = _div(shape[i], mesh, batch_axes(mesh))
+            if ba:
+                spec[i] = ba if len(ba) > 1 else ba[0]
+        elif ax == "seq" and seq_axis and seq_axis in mesh.axis_names:
+            if shape[i] % _axis_size(mesh, seq_axis) == 0:
+                spec[i] = seq_axis
+        elif ax in ("kv_heads", "heads", "d_ff") and "model" in mesh.axis_names:
+            if seq_axis == "model":
+                continue
+            if shape[i] % _axis_size(mesh, "model") == 0:
+                spec[i] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_axes, abstract_cache, mesh: Mesh,
+                    seq_axis=None):
+    def resolve(ax, c):
+        return NamedSharding(mesh, cache_pspec(ax, c.shape, mesh, seq_axis))
+
+    return jax.tree.map(resolve, cache_axes, abstract_cache,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,96 @@
+"""Serving: prefill + single-token decode steps and a batched engine.
+
+``serve_step`` is the unit the decode-shape dry-runs lower: one new token
+for every sequence in the batch against a KV cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import init_cache
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, forward
+
+
+def make_serve_step(cfg: ModelConfig, seq_sharded: bool = False,
+                    greedy: bool = True) -> Callable:
+    """(params, cache, token (B,), pos ()) -> (next_token (B,), new_cache,
+    logits)."""
+
+    def step(params, cache, token, pos):
+        logits, new_cache = decode_step(params, cfg, cache, token, pos,
+                                        seq_sharded=seq_sharded)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_cache, logits
+
+    return step
+
+
+def prefill(params, cfg: ModelConfig, cache: dict, tokens: jax.Array):
+    """Sequential prefill through the decode path (cache-filling).  Loop via
+    lax.scan over positions — O(S) steps, used by tests/examples with small
+    S; production prefill lowers ``forward`` instead."""
+
+    def body(c, i):
+        logits, c = decode_step(params, cfg, c, tokens[:, i], i)
+        return c, logits
+
+    cache, logits = jax.lax.scan(body, cache,
+                                 jnp.arange(tokens.shape[1]))
+    return cache, logits[-1]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+class ServingEngine:
+    """Greedy batched serving loop over a fixed slot count.
+
+    Pragmatic continuous batching: all slots share one position counter
+    (left-padded prompts), good enough to exercise the serve path
+    end-to-end on CPU.  Real deployments lower `make_serve_step` per pod.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, slots: int, max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.step = jax.jit(make_serve_step(cfg))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        done: List[Request] = []
+        for i in range(0, len(requests), self.slots):
+            chunk = requests[i:i + self.slots]
+            B = len(chunk)
+            plen = max(len(r.prompt) for r in chunk)
+            toks = np.zeros((B, plen), np.int32)
+            for j, r in enumerate(chunk):
+                toks[j, plen - len(r.prompt):] = r.prompt
+            cache, _ = init_cache(cfg, B, self.max_seq)
+            cache, _ = jax.jit(
+                lambda p, c, t: prefill(p, cfg, c, t))(
+                    self.params, cache, jnp.asarray(toks))
+            tok = jnp.asarray(toks[:, -1])
+            outs = []
+            max_new = max(r.max_new for r in chunk)
+            for t in range(max_new):
+                tok, cache, _ = self.step(self.params, cache, tok,
+                                          jnp.int32(plen + t))
+                outs.append(np.asarray(tok))
+            outs = np.stack(outs, 1)
+            for j, r in enumerate(chunk):
+                r.out = outs[j, :r.max_new]
+                done.append(r)
+        return done

@@ -1,0 +1,55 @@
+"""Minimal dependency-free checkpointing (npz + structure pickle).
+
+Supports the HadarE checkpoint/restart path: a preempted job saves
+(params, opt_state, step) and a later round restores them on a different
+node.  The simulator charges the paper's 10 s penalty for this event; the
+real-training driver measures the actual save+restore wall time.
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {}
+    dtypes = []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(str(l.dtype) if hasattr(l, "dtype") else None)
+        if a.dtype == jnp.bfloat16:
+            a = a.astype(np.float32)  # npz can't store bf16
+        arrays[f"a{i}"] = a
+    with open(path, "wb") as f:
+        pickle.dump({"treedef": treedef, "n": len(leaves),
+                     "dtypes": dtypes}, f)
+        np.savez(f, **arrays)
+
+
+def restore(path: str):
+    with open(path, "rb") as f:
+        meta = pickle.load(f)
+        data = np.load(io.BytesIO(f.read()))
+    leaves = []
+    for i in range(meta["n"]):
+        a = data[f"a{i}"]
+        dt = meta["dtypes"][i]
+        if dt == "bfloat16":
+            a = jnp.asarray(a, jnp.bfloat16)
+        else:
+            a = jnp.asarray(a)
+        leaves.append(a)
+    return jax.tree.unflatten(meta["treedef"], leaves)

@@ -1,0 +1,73 @@
+"""HadarE parameter consolidation (paper §V-B).
+
+Copies of a job trained on different nodes are merged each round by
+*weight-averaging* their parameters, weighted by the number of training
+steps each copy completed (more-capable nodes contribute more steps and
+therefore more weight — the paper credits this for the improved model
+quality in Table IV).
+
+Two forms:
+  * ``weight_average(params_list, steps)`` — host-side pytree average used
+    by the real-training driver (copies live as separate pytrees).
+  * ``make_pod_consolidate(mesh)`` — the TPU-native form: each pod-axis
+    slice holds one copy; consolidation is a weighted psum over the ``pod``
+    mesh axis (the local-SGD/FedAvg pattern).  This is what the multi-pod
+    dry-run lowers and compiles.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def weight_average(params_list: List, steps: Sequence[float]):
+    """Weighted average of N parameter pytrees; weights ∝ steps."""
+    w = jnp.asarray(steps, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def avg(*leaves):
+        acc = sum(l.astype(jnp.float32) * w[i]
+                  for i, l in enumerate(leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *params_list)
+
+
+def consolidate_into(base, update, alpha: float):
+    """base <- (1-alpha)*base + alpha*update  (incremental merge)."""
+    return jax.tree.map(
+        lambda b, u: ((1 - alpha) * b.astype(jnp.float32)
+                      + alpha * u.astype(jnp.float32)).astype(b.dtype),
+        base, update)
+
+
+def pod_consolidate(stacked_params, steps):
+    """TPU-native consolidation: each leaf has a leading ``n_copies`` dim
+    that the launcher shards over the ``pod`` mesh axis; the weighted mean
+    over that dim lowers to a reduce over pods (GSPMD inserts the
+    all-reduce).  Output is pod-replicated — exactly HadarE's round
+    boundary.  Pure pjit: composes with model/data-axis sharded params."""
+    w = steps.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def avg(p):
+        pf = p.astype(jnp.float32)
+        out = jnp.tensordot(w, pf, axes=(0, 0))
+        return out.astype(p.dtype)
+
+    return jax.tree.map(avg, stacked_params)
+
+
+def pod_consolidate_shardings(param_shardings, mesh: Mesh, axis: str = "pod"):
+    """in/out shardings for ``pod_consolidate``: inputs get a leading
+    ``pod`` dim prepended to each param's spec; outputs keep the param spec
+    (pod-replicated)."""
+
+    def with_pod(s: NamedSharding):
+        return NamedSharding(mesh, P(axis, *s.spec))
+
+    ins = jax.tree.map(with_pod, param_shardings)
+    return ins, param_shardings

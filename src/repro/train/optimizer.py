@@ -1,0 +1,109 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+AdamW with decoupled weight decay + global-norm clipping + schedules,
+operating on arbitrary pytrees.  Moments are kept in f32 regardless of the
+param dtype (mixed-precision convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    kind: str = "adamw"  # "adamw" | "sgdm"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, oc.warmup_steps)
+    prog = jnp.clip((s - oc.warmup_steps)
+                    / jnp.maximum(1.0, oc.total_steps - oc.warmup_steps),
+                    0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(
+        jnp.pi * prog))
+    return oc.lr * jnp.where(s < oc.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), n
+
+
+def init_opt_state(params, oc: OptConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if oc.kind == "sgdm":
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros)
+    return OptState(
+        jnp.zeros((), jnp.int32), zeros,
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def abstract_opt_state(abstract_params, oc: OptConfig) -> OptState:
+    f32 = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    return OptState(jax.ShapeDtypeStruct((), jnp.int32), f32,
+                    jax.tree.map(lambda p: p, f32))
+
+
+def apply_updates(params, grads, state: OptState, oc: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = state.step + 1
+    lr = schedule(oc, step)
+
+    if oc.kind == "sgdm":
+        mu = jax.tree.map(lambda m, g: oc.b1 * m + g, state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m
+                          - lr * oc.weight_decay * p.astype(jnp.float32)
+                          ).astype(p.dtype),
+            params, mu)
+        return new_params, OptState(step, mu, state.nu), \
+            {"lr": lr, "grad_norm": gnorm}
+
+    t = step.astype(jnp.float32)
+    bc1 = 1 - oc.b1 ** t
+    bc2 = 1 - oc.b2 ** t
+    mu = jax.tree.map(lambda m, g: oc.b1 * m + (1 - oc.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: oc.b2 * v + (1 - oc.b2) * jnp.square(g),
+                      state.nu, grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        pf = p.astype(jnp.float32)
+        step_ = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * pf
+        return (pf - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu), \
+        {"lr": lr, "grad_norm": gnorm}

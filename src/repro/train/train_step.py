@@ -1,0 +1,74 @@
+"""The jit-able training step (loss -> grads -> optimizer update).
+
+``make_train_step(cfg, oc)`` returns a pure function
+    step(params, opt_state, batch) -> (params, opt_state, metrics)
+with optional microbatching (gradient accumulation via lax.scan) for memory
+control.  Distribution comes entirely from the shardings pjit is given by
+the launcher — the step itself is sharding-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optimizer import OptConfig, OptState, apply_updates
+
+
+def make_loss(cfg: ModelConfig):
+    def f(params, batch):
+        return loss_fn(params, cfg, batch)
+
+    return f
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig,
+                    microbatches: int = 1) -> Callable:
+    loss = make_loss(cfg)
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def single(params, opt_state: OptState, batch):
+        (l, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = apply_updates(params, grads, opt_state, oc)
+        metrics = dict(metrics, loss=l, **om)
+        return params, opt_state, metrics
+
+    if microbatches <= 1:
+        return single
+
+    def accumulated(params, opt_state: OptState, batch):
+        def resh(x):
+            return x.reshape(microbatches, x.shape[0] // microbatches,
+                             *x.shape[1:])
+
+        mb = jax.tree.map(resh, batch)
+
+        def body(acc, b):
+            (l, m), g = grad_fn(params, b)
+            acc_g, acc_l = acc
+            return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, lsum), _ = jax.lax.scan(
+            body, (zero_g, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        l = lsum / microbatches
+        params, opt_state, om = apply_updates(params, grads, opt_state, oc)
+        return params, opt_state, dict(loss=l, ce=l, aux=jnp.zeros(()), **om)
+
+    return accumulated
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    loss = make_loss(cfg)
+
+    def step(params, batch):
+        l, m = loss(params, batch)
+        return dict(m, loss=l)
+
+    return step

@@ -1,0 +1,129 @@
+"""HLO-text analysis: collective byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the compiled
+(post-SPMD) HLO and sum result-shape bytes of every collective op.
+Accounting convention (documented in EXPERIMENTS.md §Roofline):
+
+  * all-gather / all-to-all / collective-permute: result bytes
+  * all-reduce: 2 x result bytes (reduce + broadcast phases of a ring)
+  * reduce-scatter: result bytes x ~1 (each shard receives its slice once)
+
+Async pairs (``*-start``/``*-done``) are counted once on the start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals + 'total'."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            # match the opcode at the start of the RHS expression, e.g.
+            # "(bf16[...]) all-reduce-start(", "bf16[...]{1,0} all-gather("
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not m:
+                continue
+            if re.search(rf"\b{kind}-done\b", rhs):
+                continue
+            shape_seg = rhs[:m.start()]
+            b = _shape_bytes(shape_seg)
+            if kind == "all-reduce":
+                b *= 2
+            out[kind] += b
+            break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_bytes_by_scope(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Split collective byte totals into the ENTRY computation vs. non-entry
+    computations (while-loop bodies — i.e. the layer scan).
+
+    XLA's cost_analysis counts a while body ONCE regardless of trip count;
+    the same holds for text-level accounting.  The roofline multiplies the
+    'body' bucket by the known trip count (n_layers) to undo that."""
+    out = {"entry": defaultdict(int), "body": defaultdict(int)}
+    scope = None          # None until a computation header seen
+    in_entry = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        stripped = ls.strip()
+        if depth == 0 and stripped.endswith("{") and ("(" in stripped or
+                                                      stripped.startswith("ENTRY")):
+            in_entry = stripped.startswith("ENTRY")
+            depth = 1
+            continue
+        if depth > 0:
+            depth += stripped.count("{") - stripped.count("}")
+            if depth <= 0:
+                depth = 0
+                continue
+        if " = " not in stripped:
+            continue
+        _, rhs = stripped.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if not m or re.search(rf"\b{kind}-done\b", rhs):
+                continue
+            b = _shape_bytes(rhs[:m.start()])
+            if kind == "all-reduce":
+                b *= 2
+            out["entry" if in_entry else "body"][kind] += b
+            break
+    for k in ("entry", "body"):
+        out[k] = dict(out[k])
+        out[k]["total"] = sum(v for kk, v in out[k].items() if kk != "total")
+    return out
+
+
+def count_ops(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{opcode}\(", hlo_text))
+
+
+def dominant_collectives(hlo_text: str, top: int = 5):
+    """Largest individual collective ops (kind, bytes, line snippet)."""
+    rows = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        _, rhs = ls.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            m = re.search(rf"\b{kind}(-start)?\(", rhs)
+            if m and not re.search(rf"\b{kind}-done\b", rhs):
+                rows.append((kind, _shape_bytes(rhs[:m.start()]),
+                             ls[:120]))
+                break
+    rows.sort(key=lambda r: -r[1])
+    return rows[:top]

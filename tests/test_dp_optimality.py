@@ -1,0 +1,99 @@
+"""Algorithm 2 quality: on brute-forceable instances the DP's selected
+total payoff must be within the primal-dual's guarantee of the exhaustive
+optimum over single-round allocations (and usually equal)."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dp import dp_allocation, find_alloc
+from repro.core.pricing import PriceState
+from repro.core.types import Cluster, Job, Node
+from repro.core.utility import effective_throughput
+
+
+def tiny_cluster():
+    return Cluster([Node(0, {"v100": 2}), Node(1, {"k80": 2})])
+
+
+def mk_jobs(specs):
+    jobs = []
+    for i, (w, e, xv, xk) in enumerate(specs):
+        jobs.append(Job(i, 0.0, w, e, 10, {"v100": xv, "k80": xk}))
+    return jobs
+
+
+def enumerate_allocs(job, cluster):
+    """All feasible gang allocations for one job on the tiny cluster."""
+    keys = [(n.node_id, r) for n in cluster.nodes for r in n.gpus]
+    caps = [cluster.nodes[0].gpus["v100"], cluster.nodes[1].gpus["k80"]]
+    out = []
+    for combo in itertools.product(*[range(c + 1) for c in caps]):
+        if sum(combo) == job.n_workers:
+            out.append({k: c for k, c in zip(keys, combo) if c})
+    return out
+
+
+def brute_force_best(jobs, cluster, ps, utility):
+    """Exhaustive search over joint allocations; returns max total payoff
+    (with marginal pricing applied in selection order — same cost model
+    the DP uses)."""
+    best = 0.0
+    options = [enumerate_allocs(j, cluster) + [None] for j in jobs]
+    free0 = cluster.free_map({})
+    for combo in itertools.product(*options):
+        used = {}
+        feasible = True
+        for alloc in combo:
+            if alloc is None:
+                continue
+            for k, v in alloc.items():
+                used[k] = used.get(k, 0) + v
+                if used[k] > free0[k]:
+                    feasible = False
+        if not feasible:
+            continue
+        total = 0.0
+        extra = {}
+        for j, alloc in zip(jobs, combo):
+            if alloc is None:
+                continue
+            cand = find_alloc(j, free0, ps, 0.0, utility,
+                              extra_gamma=extra, force=True)
+            # evaluate THIS combo's alloc at current prices via payoff est
+            from repro.core.dp import _estimate_payoff, _price_for
+            cost = 0.0
+            taken = {}
+            for (h, r), c in alloc.items():
+                for i in range(c):
+                    cost += _price_for(ps, free0, h, r,
+                                       taken.get((h, r), 0), extra)
+                    taken[(h, r)] = taken.get((h, r), 0) + 1
+            total += max(0.0, _estimate_payoff(j, alloc, cost, 0.0,
+                                               utility))
+            for k, v in alloc.items():
+                extra[k] = extra.get(k, 0) + v
+        best = max(best, total)
+    return best
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_dp_payoff_near_bruteforce(seed):
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    specs = [(int(rng.randint(1, 3)), int(rng.randint(5, 50)),
+              float(rng.uniform(0.5, 3.0)), float(rng.uniform(0.05, 0.5)))
+             for _ in range(3)]
+    jobs = mk_jobs(specs)
+    cluster = tiny_cluster()
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    sel = dp_allocation(jobs, cluster.free_map({}), ps, 0.0,
+                        effective_throughput)
+    dp_total = sum(c.payoff for c in sel.values())
+    opt = brute_force_best(jobs, cluster,
+                           PriceState(cluster, jobs, horizon=86400.0),
+                           effective_throughput)
+    # DP must reach at least half the enumerated optimum (2-alpha bound is
+    # far looser; in practice it matches)
+    assert dp_total >= 0.5 * opt - 1e-9, (dp_total, opt)

@@ -1,0 +1,133 @@
+"""HadarE: forking, Job Tracker aggregation, Thm 3 (CRU monotonicity in
+copy count), consolidation math, and the Eq. 10 throughput estimator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hadare import (MAX_JOB_COUNT, JobTracker, fork_job,
+                               simulate_hadare)
+from repro.core.hadar import HadarScheduler
+from repro.core.simulator import simulate
+from repro.core import throughput as tp
+from repro.core.trace import (THROUGHPUT_TABLE, mix_jobs,
+                              motivation_jobs)
+from repro.core.trace import testbed_cluster as _testbed_cluster
+from repro.core.types import Job
+from repro.train.consolidate import weight_average
+
+
+def test_fork_job_id_formula():
+    """job_ID = max_job_count * i + parent_job_id (paper §V-A)."""
+    j = Job(7, 0.0, 1, 10, 10, {"t4": 1.0})
+    copies = fork_job(j, 3)
+    assert [c.job_id for c in copies] == [MAX_JOB_COUNT * i + 7
+                                          for i in (1, 2, 3)]
+    assert all(c.parent == 7 and c.single_node for c in copies)
+
+
+def test_tracker_aggregates_and_completes():
+    j = Job(1, 0.0, 1, 2, 10, {"t4": 1.0})      # 20 iterations total
+    tr = JobTracker(n_nodes=3)
+    copies = tr.register(j)
+    prog = {copies[0].job_id: 8.0, copies[1].job_id: 8.0,
+            copies[2].job_id: 5.0}
+    rates = {c.job_id: 1.0 for c in copies}
+    finished = tr.aggregate_round(prog, now_start=90.0, round_len=10.0,
+                                  rates=rates)
+    assert finished == [1]                       # 21 >= 20 -> done
+    # exact finish: 20 iters at aggregate rate 3/s -> 90 + 20/3
+    assert abs(j.finish_time - (90.0 + 20.0 / 3.0)) < 1e-9
+    assert all(c.done_iters == j.done_iters for c in copies)
+
+
+def test_hadare_no_idle_nodes_corollary():
+    """Thm 3 corollary: with n-copy forking no node idles in any round but
+    possibly the last."""
+    cluster = _testbed_cluster()
+    res = simulate_hadare(mix_jobs("M-3", cluster), cluster, round_len=90.0)
+    for r in res.rounds[:-1]:
+        assert r.cru == 1.0, f"idle node at t={r.t}"
+
+
+@pytest.mark.parametrize("mix", ["M-1", "M-4"])
+def test_hadare_beats_hadar(mix):
+    """§VI headline: forking reduces TTD and raises CRU vs plain Hadar."""
+    cluster = _testbed_cluster()
+    res_e = simulate_hadare(mix_jobs(mix, cluster), cluster, round_len=90.0)
+    res_h = simulate(HadarScheduler(), mix_jobs(mix, cluster), cluster,
+                     round_len=90.0)
+    assert res_e.total_seconds <= res_h.total_seconds
+    assert res_e.avg_cru() >= res_h.avg_cru()
+
+
+def test_thm3_cru_monotone_in_copies():
+    """CRU^1 <= CRU^x <= CRU^n == CRU^{n+j} (Eq. 11/14)."""
+    cluster = _testbed_cluster()
+    n = len(cluster.nodes)
+    crus = {}
+    for x in (1, 2, n, n + 2):
+        res = simulate_hadare(mix_jobs("M-1", cluster), cluster,
+                              round_len=90.0, n_copies=x)
+        crus[x] = res.avg_cru()
+    assert crus[1] <= crus[2] + 1e-9
+    assert crus[2] <= crus[n] + 1e-9
+    assert abs(crus[n] - crus[n + 2]) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# consolidation math
+# ---------------------------------------------------------------------------
+
+def test_weight_average_is_steps_weighted():
+    p1 = {"w": jnp.ones((3, 3))}
+    p2 = {"w": jnp.zeros((3, 3))}
+    avg = weight_average([p1, p2], [3.0, 1.0])
+    assert jnp.allclose(avg["w"], 0.75)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s1=st.floats(0.1, 100), s2=st.floats(0.1, 100),
+       seed=st.integers(0, 1000))
+def test_weight_average_convex_property(s1, s2, seed):
+    """Consolidation is a convex combination: result within leaf-wise
+    min/max envelope and exact for identical copies."""
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(k, (4,))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (4,))
+    avg = weight_average([{"w": a}, {"w": b}], [s1, s2])["w"]
+    lo = jnp.minimum(a, b) - 1e-6
+    hi = jnp.maximum(a, b) + 1e-6
+    assert bool(((avg >= lo) & (avg <= hi)).all())
+    same = weight_average([{"w": a}, {"w": a}], [s1, s2])["w"]
+    assert jnp.allclose(same, a, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 estimator
+# ---------------------------------------------------------------------------
+
+def test_estimator_rank_correlates_with_measured():
+    """Eq. 10 must rank devices usefully: Spearman correlation with the
+    measured table > 0.5 per model."""
+    devices = ["v100", "p100", "k80", "t4", "titanrtx", "rtx3090", "t400",
+               "a2000"]
+    for model, meas in THROUGHPUT_TABLE.items():
+        est = [tp.estimate_throughput(model, d) for d in devices]
+        msd = [meas[d] for d in devices]
+        r_est = np.argsort(np.argsort(est))
+        r_msd = np.argsort(np.argsort(msd))
+        rho = np.corrcoef(r_est, r_msd)[0, 1]
+        assert rho > 0.5, (model, rho)
+
+
+def test_tracker_progressive_refinement():
+    t = tp.ThroughputTracker(["resnet18"], ["v100", "k80"])
+    est = t.get("resnet18", "v100")
+    t.observe("resnet18", "v100", 42.0)
+    assert t.get("resnet18", "v100") == 42.0
+    t.observe("resnet18", "v100", 44.0)
+    assert est != t.get("resnet18", "v100")
+    assert 42.0 < t.get("resnet18", "v100") <= 44.0   # EWMA
+    assert t.coverage() == 0.5

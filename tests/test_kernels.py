@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_kernel
+from repro.kernels.rwkv6_scan import rwkv6_scan as rwkv_kernel
+
+TOL = {jnp.float32: 2e-4, jnp.bfloat16: 5e-2}
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 128, 128),
+    (2, 2, 2, 384, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 96), (False, 0)])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, Hq, S, D), dtype)
+    k = _rand(ks[1], (B, Hkv, S, D), dtype)
+    v = _rand(ks[2], (B, Hkv, S, D), dtype)
+    out = fa_kernel(q, k, v, causal=causal, window=window,
+                    block_q=128, block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < TOL[dtype], err
+
+
+def test_flash_ops_padding_path():
+    """ops wrapper pads ragged sequence lengths to the tile size."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, Hq, Hkv, D = 2, 100, 4, 2, 32   # S not a tile multiple
+    q = _rand(ks[0], (B, S, Hq, D))
+    k = _rand(ks[1], (B, S, Hkv, D))
+    v = _rand(ks[2], (B, S, Hkv, D))
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ops.flash_attention(q, k, v, causal=True, impl="xla")
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,D,chunk", [
+    (1, 2, 64, 16, 16), (2, 2, 128, 32, 32), (1, 1, 96, 64, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_sweep(B, H, S, D, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = _rand(ks[0], (B, H, S, D), dtype, 0.5)
+    k = _rand(ks[1], (B, H, S, D), dtype, 0.5)
+    v = _rand(ks[2], (B, H, S, D), dtype, 0.5)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, D)) - 1.0)
+         * 0.98 + 0.01).astype(dtype)
+    u = _rand(ks[4], (H, D), dtype, 0.3)
+    s0 = _rand(ks[5], (B, H, D, D), jnp.float32, 0.2)
+    out, sT = rwkv_kernel(r, k, v, w, u, s0, chunk=chunk)
+    wout, wsT = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    e1 = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                               - wout.astype(jnp.float32))))
+    e2 = float(jnp.max(jnp.abs(sT - wsT)))
+    assert e1 < TOL[dtype] and e2 < 5e-2, (e1, e2)
+
+
+def test_rwkv6_state_chaining():
+    """Scanning two halves with carried state == one full scan."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    B, H, S, D = 1, 2, 64, 16
+    r = _rand(ks[0], (B, H, S, D), scale=0.5)
+    k = _rand(ks[1], (B, H, S, D), scale=0.5)
+    v = _rand(ks[2], (B, H, S, D), scale=0.5)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, H, S, D))) * 0.9 + 0.05
+    u = _rand(ks[4], (H, D), scale=0.3)
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    full, sT = rwkv_kernel(r, k, v, w, u, s0, chunk=16)
+    h = S // 2
+    o1, s1 = rwkv_kernel(r[:, :, :h], k[:, :, :h], v[:, :, :h],
+                         w[:, :, :h], u, s0, chunk=16)
+    o2, s2 = rwkv_kernel(r[:, :, h:], k[:, :, h:], v[:, :, h:],
+                         w[:, :, h:], u, s1, chunk=16)
+    assert float(jnp.max(jnp.abs(jnp.concatenate([o1, o2], 2) - full))) < 1e-4
+    assert float(jnp.max(jnp.abs(s2 - sT))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 40), d=st.integers(2, 96),
+       seed=st.integers(0, 2**16))
+def test_rmsnorm_property(n, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    s = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+    out = ops.rmsnorm(x, s)
+    want = ref.rmsnorm_ref(x, s)
+    assert float(jnp.max(jnp.abs(out - want))) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_flash_attention_rowsum_property(seed):
+    """Softmax rows sum to 1 => attention output lies in conv hull of V:
+    with V == all-ones, output must be exactly ones."""
+    B, H, S, D = 1, 2, 128, 32
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, H, S, D))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, H, S, D))
+    v = jnp.ones((B, H, S, D))
+    out = fa_kernel(q, k, v, causal=True, block_q=64, block_k=64)
+    assert float(jnp.max(jnp.abs(out - 1.0))) < 1e-5

@@ -1,0 +1,172 @@
+"""Hadar core: pricing (Eqs. 5-7), FIND_ALLOC, DP (Algorithm 2) invariants
++ hypothesis property tests on the system's invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dp import dp_allocation, find_alloc
+from repro.core.hadar import HadarScheduler
+from repro.core.pricing import PriceState
+from repro.core.types import Cluster, Job, Node, alloc_size
+from repro.core.utility import effective_throughput
+
+
+def mk_cluster():
+    return Cluster([Node(0, {"v100": 2}), Node(1, {"p100": 3}),
+                    Node(2, {"k80": 1})])
+
+
+def mk_job(jid=0, w=2, epochs=10, tp=None):
+    return Job(jid, 0.0, w, epochs, 10,
+               tp or {"v100": 1.0, "p100": 0.6, "k80": 0.1})
+
+
+# ---------------------------------------------------------------------------
+# pricing
+# ---------------------------------------------------------------------------
+
+def test_price_bounds_and_monotonicity():
+    """Eq. 5: k(0) = U_min, k(c) = U_max, strictly increasing in gamma."""
+    cluster = mk_cluster()
+    jobs = [mk_job(0), mk_job(1, w=1)]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    for r in cluster.gpu_types:
+        cap = cluster.capacity()[r]
+        prices = [ps.price(0, r, cap, gamma_override=g)
+                  for g in range(cap + 1)]
+        assert abs(prices[0] - ps.u_min[r]) < 1e-12
+        assert abs(prices[-1] - ps.u_max[r]) < 1e-9 * max(1, ps.u_max[r])
+        assert all(b > a for a, b in zip(prices, prices[1:]))
+
+
+def test_alpha_matches_theorem2():
+    cluster = mk_cluster()
+    ps = PriceState(cluster, [mk_job()], horizon=86400.0)
+    want = max(1.0, max(math.log(ps.u_max[r] / ps.u_min[r])
+                        for r in ps.u_max))
+    assert abs(ps.alpha() - want) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(w=st.integers(1, 4), epochs=st.integers(1, 200),
+       x=st.floats(0.05, 10.0))
+def test_umax_dominates_umin_property(w, epochs, x):
+    """U_min < U_max must hold for any job population (else the price
+    function inverts and the competitive bound is vacuous)."""
+    cluster = mk_cluster()
+    jobs = [mk_job(0, w=w, epochs=epochs,
+                   tp={"v100": x, "p100": x * 0.6, "k80": x * 0.1})]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    for r in cluster.gpu_types:
+        assert ps.u_min[r] < ps.u_max[r]
+
+
+# ---------------------------------------------------------------------------
+# FIND_ALLOC
+# ---------------------------------------------------------------------------
+
+def test_find_alloc_respects_capacity_and_gang():
+    cluster = mk_cluster()
+    jobs = [mk_job(0, w=3)]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    free = cluster.free_map({})
+    c = find_alloc(jobs[0], free, ps, 0.0, effective_throughput)
+    assert c is not None
+    assert alloc_size(c.alloc) == 3                      # gang: exactly W
+    for (h, r), n in c.alloc.items():
+        assert n <= free[(h, r)]                         # capacity
+
+
+def test_find_alloc_prefers_fast_types_when_free():
+    cluster = mk_cluster()
+    jobs = [mk_job(0, w=2)]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    c = find_alloc(jobs[0], cluster.free_map({}), ps, 0.0,
+                   effective_throughput)
+    types = {r for (_, r) in c.alloc}
+    assert types == {"v100"}                             # both on v100
+
+
+def test_find_alloc_single_node_constraint():
+    cluster = mk_cluster()
+    j = mk_job(0, w=3)
+    j.single_node = True
+    ps = PriceState(cluster, [j], horizon=86400.0)
+    c = find_alloc(j, cluster.free_map({}), ps, 0.0, effective_throughput)
+    assert c is not None
+    nodes = {h for (h, _), n in c.alloc.items() if n}
+    assert len(nodes) == 1                               # HadarE copies
+
+
+def test_find_alloc_none_when_insufficient():
+    cluster = mk_cluster()
+    j = mk_job(0, w=10)                                  # > 6 total GPUs
+    ps = PriceState(cluster, [j], horizon=86400.0)
+    assert find_alloc(j, cluster.free_map({}), ps, 0.0,
+                      effective_throughput) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), w=st.integers(1, 6))
+def test_find_alloc_never_oversubscribes_property(seed, w):
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    cluster = mk_cluster()
+    used = {}
+    for (h, r), cap in cluster.free_map({}).items():
+        used[(h, r)] = int(rng.randint(0, cap + 1))
+    free = cluster.free_map(used)
+    j = mk_job(0, w=w)
+    ps = PriceState(cluster, [j], horizon=86400.0)
+    ps.gamma.update(used)
+    c = find_alloc(j, free, ps, 0.0, effective_throughput)
+    if c is not None:
+        assert alloc_size(c.alloc) == w
+        for k, n in c.alloc.items():
+            assert n <= free.get(k, 0)
+
+
+# ---------------------------------------------------------------------------
+# DP (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def test_dp_allocations_disjoint_and_feasible():
+    cluster = mk_cluster()
+    jobs = [mk_job(i, w=2) for i in range(4)]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    free = cluster.free_map({})
+    sel = dp_allocation(jobs, free, ps, 0.0, effective_throughput)
+    total = {}
+    for cand in sel.values():
+        for k, v in cand.alloc.items():
+            total[k] = total.get(k, 0) + v
+    for k, v in total.items():
+        assert v <= free[k], "DP oversubscribed a device"
+
+
+def test_dp_greedy_path_matches_exact_feasibility():
+    """Long-queue greedy fallback also never oversubscribes."""
+    cluster = mk_cluster()
+    jobs = [mk_job(i, w=1 + i % 3) for i in range(12)]
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    free = cluster.free_map({})
+    sel = dp_allocation(jobs, free, ps, 0.0, effective_throughput,
+                        max_exact=4)
+    total = {}
+    for cand in sel.values():
+        for k, v in cand.alloc.items():
+            total[k] = total.get(k, 0) + v
+    for k, v in total.items():
+        assert v <= free[k]
+
+
+def test_scheduler_gang_all_or_nothing():
+    """Constraint (1e): each job gets exactly W_j devices or none."""
+    cluster = mk_cluster()
+    jobs = [mk_job(i, w=2 + i % 2) for i in range(5)]
+    sched = HadarScheduler()
+    out = sched.schedule(0.0, 360.0, jobs, cluster)
+    for jid, alloc in out.items():
+        j = next(x for x in jobs if x.job_id == jid)
+        assert alloc_size(alloc) == j.n_workers

@@ -1,0 +1,107 @@
+"""Simulator conservation laws + baseline schedulers + the paper's
+motivational example (Fig. 1) as an executable assertion."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import (GavelScheduler, TiresiasScheduler,
+                                   YarnCSScheduler)
+from repro.core.simulator import simulate
+from repro.core.trace import (motivation_cluster, motivation_jobs,
+                              philly_trace, simulation_cluster)
+from repro.core.types import alloc_size
+
+ALL = [HadarScheduler, GavelScheduler, TiresiasScheduler, YarnCSScheduler]
+
+
+@pytest.mark.parametrize("sched_cls", ALL)
+def test_all_jobs_complete_and_metrics_bounded(sched_cls):
+    jobs = philly_trace(n_jobs=12, seed=3)
+    res = simulate(sched_cls(), jobs, simulation_cluster(), round_len=360.0,
+                   max_rounds=5000)
+    assert all(j.finish_time is not None for j in res.jobs)
+    assert all(j.done_iters >= j.total_iters - 1e-6 for j in res.jobs)
+    for r in res.rounds:
+        assert 0.0 <= r.gru <= 1.0 + 1e-9
+        assert 0.0 <= r.cru <= 1.0 + 1e-9
+
+
+def test_fig1_motivational_example():
+    """Paper §II-A: Hadar finishes the 3-job example at least one round
+    before Gavel with higher utilization."""
+    cluster = motivation_cluster()
+    res_h = simulate(HadarScheduler(), motivation_jobs(), cluster,
+                     round_len=60.0)
+    res_g = simulate(GavelScheduler(), motivation_jobs(), cluster,
+                     round_len=60.0)
+    assert res_h.total_seconds < res_g.total_seconds
+    assert len(res_h.rounds) <= len(res_g.rounds) - 1
+    assert res_h.avg_gru() > res_g.avg_gru()
+
+
+def test_hadar_beats_gavel_ttd_on_trace():
+    """Fig. 4 headline: Hadar's TTD beats Gavel's (paper: 1.21x) at
+    moderate load."""
+    cluster = simulation_cluster()
+    jobs_h = philly_trace(n_jobs=60, seed=1)
+    jobs_g = philly_trace(n_jobs=60, seed=1)
+    res_h = simulate(HadarScheduler(), jobs_h, cluster, round_len=360.0)
+    res_g = simulate(GavelScheduler(), jobs_g, cluster, round_len=360.0)
+    assert res_h.total_seconds <= res_g.total_seconds * 1.02
+    assert res_h.avg_gru() >= res_g.avg_gru()
+
+
+def test_yarn_cs_non_preemptive():
+    jobs = philly_trace(n_jobs=10, seed=5)
+    res = simulate(YarnCSScheduler(), jobs, simulation_cluster(),
+                   round_len=360.0, max_rounds=5000)
+    assert all(j.restarts == 0 for j in res.jobs)
+
+
+def test_gavel_allocation_matrix_constraints():
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=30, seed=7)
+    Y = GavelScheduler.allocation_matrix(jobs, cluster)
+    assert (Y >= -1e-9).all()
+    assert (Y.sum(axis=1) <= 1.0 + 1e-6).all()          # sum_r Y_jr <= 1
+    cap = cluster.capacity()
+    for ri, r in enumerate(cluster.gpu_types):           # capacity
+        used = sum(Y[ji, ri] * j.n_workers for ji, j in enumerate(jobs))
+        assert used <= cap[r] + 1e-6
+
+
+def test_gavel_single_type_per_round():
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=10, seed=2)
+    out = GavelScheduler().schedule(0.0, 360.0, jobs, cluster)
+    for jid, alloc in out.items():
+        types = {r for (_, r), c in alloc.items() if c}
+        assert len(types) == 1                           # job-level only
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), n=st.integers(4, 16))
+def test_simulator_capacity_invariant_property(seed, n):
+    """No round may allocate more devices than exist (any scheduler)."""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=n, seed=seed)
+    sched = HadarScheduler()
+    out = sched.schedule(0.0, 360.0, jobs, cluster)
+    used = {}
+    for alloc in out.values():
+        for k, v in alloc.items():
+            used[k] = used.get(k, 0) + v
+    free = cluster.free_map({})
+    for k, v in used.items():
+        assert v <= free[k]
+
+
+def test_restart_penalty_reduces_progress():
+    """A job whose allocation changes loses the 10 s checkpoint-restart."""
+    jobs = philly_trace(n_jobs=6, seed=9)
+    res = simulate(GavelScheduler(), jobs, simulation_cluster(),
+                   round_len=360.0, max_rounds=4000)
+    res2 = simulate(GavelScheduler(),
+                    philly_trace(n_jobs=6, seed=9), simulation_cluster(),
+                    round_len=360.0, max_rounds=4000, restart_penalty=0.0)
+    assert res2.total_seconds <= res.total_seconds + 1e-6
