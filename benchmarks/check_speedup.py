@@ -1,0 +1,94 @@
+"""Perf smoke gate: fail if the vectorized engine's per-round scheduling
+latency at n=256 regresses more than 2x against the recorded baseline.
+
+Usage:
+  python benchmarks/check_speedup.py            # gate against baseline
+  python benchmarks/check_speedup.py --record   # re-record the baseline
+
+To stay machine-independent, the gate compares *normalized* latency:
+each measurement is divided by the runtime of the vendored scalar
+reference engine (tests/_seed_reference.py) on the same machine in the
+same process.  The committed baseline JSON records both numbers from the
+reference machine; a 2x margin on the ratio-of-ratios catches an
+accidental return of the per-device Python loops (a ~30x cliff) without
+tripping on slower CI hardware."""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+BASELINE = os.path.join(os.path.dirname(__file__),
+                        "baseline_fig5_n256.json")
+N_JOBS = 256
+REPEATS = 3
+MAX_REGRESSION = 2.0
+
+
+def _best_round(mk_sched, jobs_factory, cluster) -> float:
+    best = float("inf")
+    for _ in range(REPEATS):
+        jobs = jobs_factory()
+        sched = mk_sched()
+        t0 = time.perf_counter()
+        sched.schedule(0.0, 360.0, jobs, cluster)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure():
+    import _seed_reference as ref
+    from benchmarks.fig5_scalability import grown_cluster
+    from repro.core.hadar import HadarScheduler
+    from repro.core.trace import philly_trace
+
+    cluster = grown_cluster(N_JOBS)
+    jobs_factory = lambda: philly_trace(n_jobs=N_JOBS, seed=1,
+                                        types=cluster.gpu_types)
+    return {
+        "hadar_s": _best_round(HadarScheduler, jobs_factory, cluster),
+        "ref_hadar_s": _best_round(ref.ReferenceHadarScheduler,
+                                   jobs_factory, cluster),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help="re-record the baseline instead of gating")
+    args = ap.parse_args()
+
+    current = measure()
+    if args.record:
+        with open(BASELINE, "w") as f:
+            json.dump({"n_jobs": N_JOBS, **current}, f, indent=1)
+        print(f"recorded baseline: {current}")
+        return
+
+    if not os.path.exists(BASELINE):
+        print(f"no baseline at {BASELINE}; run with --record first")
+        raise SystemExit(2)
+    with open(BASELINE) as f:
+        base = json.load(f)
+
+    cur_norm = current["hadar_s"] / max(current["ref_hadar_s"], 1e-9)
+    base_norm = base["hadar_s"] / max(base["ref_hadar_s"], 1e-9)
+    ratio = cur_norm / max(base_norm, 1e-9)
+    print(f"hadar_s: current {current['hadar_s']:.3f}s "
+          f"(scalar ref {current['ref_hadar_s']:.3f}s, "
+          f"{1 / max(cur_norm, 1e-9):.1f}x speedup) vs baseline "
+          f"{base['hadar_s']:.3f}s ({1 / max(base_norm, 1e-9):.1f}x) — "
+          f"normalized ratio {ratio:.2f}x")
+    if ratio > MAX_REGRESSION:
+        print(f"FAIL: normalized scheduling latency regressed "
+              f">{MAX_REGRESSION}x vs baseline")
+        raise SystemExit(1)
+    print("speedup gate passed")
+
+
+if __name__ == "__main__":
+    main()

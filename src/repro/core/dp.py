@@ -14,11 +14,22 @@ DP_allocation walks the queue with a select/skip branch per job,
 memoizing on (index, server-state) — the "save the result … to avoid
 recomputing the same subproblem" of the paper — and returns the subset of
 jobs + allocations maximizing total payoff.
+
+The hot path is vectorized: candidate generation prices the whole
+cluster through PriceState's key arrays (marginal unit-price matrices,
+cumulative packing costs, one stable argsort for the spread pool)
+instead of per-device Python loops, and the job's utility is evaluated
+once per GPU type (the gang payoff depends on the allocation only
+through its bottleneck rate, Eq. 1b).  Decisions are identical to the
+scalar reference — candidate enumeration order, tie-breaking, and the
+mu_j gate are preserved — which the engine-equivalence tests enforce.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.pricing import PriceState
 from repro.core.types import Alloc, Cluster, Job
@@ -39,10 +50,7 @@ class Candidate:
 
 def _price_for(ps: PriceState, free: Dict, node_id: int, r: str,
                taken: int, extra: Dict) -> float:
-    cap = 0
-    for n in ps.cluster.nodes:
-        if n.node_id == node_id:
-            cap = n.gpus.get(r, 0)
+    cap = ps._cap_by_key.get((node_id, r), 0)
     g = ps.gamma.get((node_id, r), 0) + extra.get((node_id, r), 0) + taken
     return ps.price(node_id, r, cap, gamma_override=g)
 
@@ -68,6 +76,21 @@ def find_alloc(job: Job, free: Dict[Tuple[int, str], int], ps: PriceState,
     ``force`` skips the mu_j > 0 admission gate (work-conserving backfill).
     """
     extra = extra_gamma or {}
+    avail = ps.free_to_arr(free)
+    gamma = ps.gamma_arr.copy()
+    for k, v in extra.items():
+        m = ps.key_index.get(k)
+        if m is not None:
+            avail[m] -= v
+            gamma[m] += v
+    return _find_alloc_arrays(job, avail, gamma, ps, now, utility, force)
+
+
+def _find_alloc_arrays(job: Job, avail: np.ndarray, gamma: np.ndarray,
+                       ps: PriceState, now: float, utility: UtilityFn,
+                       force: bool) -> Optional[Candidate]:
+    """Array-state core of FIND_ALLOC.  ``avail`` = free - extra and
+    ``gamma`` = committed + extra, both on PriceState's key axis."""
     W = job.n_workers
     # GPU types sorted by job throughput, descending (line 23)
     types = sorted([r for r in ps.cluster.gpu_types
@@ -75,73 +98,117 @@ def find_alloc(job: Job, free: Dict[Tuple[int, str], int], ps: PriceState,
                    key=lambda r: -job.throughput[r])
     if not types:
         return None
+    K = len(types)
+    x_types = np.array([job.throughput[r] for r in types])
 
-    avail = {k: free.get(k, 0) - extra.get(k, 0) for k in free}
-    candidates: List[Candidate] = []
+    # rank of each key's type in the preference order; K = unusable
+    rank_of_col = np.full(len(ps.cluster.gpu_types), K, dtype=np.intp)
+    for j, r in enumerate(types):
+        rank_of_col[ps.cluster.gpu_types.index(r)] = j
+    rank = rank_of_col[ps.type_col]
+    usable = rank < K
 
-    # Candidates are generated per fastest-type *prefix* (all-of-type-1,
-    # types 1-2, 1-3, ...): the synchronization barrier (Eq. 1b) runs the
-    # whole gang at the slowest member's rate, so "8 fast + 1 slow" must
-    # compete against "8 fast" explicitly — the essence of task-level
-    # heterogeneity awareness.
-    for k in range(1, len(types) + 1):
-        allowed = types[:k]
+    # payoff depends on the allocation only through its bottleneck rate,
+    # so the job's utility is evaluated once per type (Eq. 1b)
+    rem = job.remaining_iters
+    u_table = np.array([
+        utility(job, max(now + rem / (x * max(1, W)) - job.arrival, 1e-9))
+        for x in x_types])
 
-        # ---- consolidated: all tasks on one server (line 24) ------------
-        for node in ps.cluster.nodes:
-            h = node.node_id
-            total_free = sum(avail.get((h, r), 0) for r in allowed)
-            if total_free < W:
+    # marginal unit prices for every key, out to the deepest pool depth
+    c_sp = int(max(avail.max(initial=0.0), 0.0))
+    P = ps.unit_prices(gamma, c_sp) if c_sp else \
+        np.zeros((len(ps.keys), 0))
+
+    # ---- consolidated: all tasks on one server (line 24) ---------------
+    # Scatter per-key availability into (node, preference-rank) layout.
+    N = ps.n_node_rows
+    A = np.zeros((N, K))
+    A[ps.node_row[usable], rank[usable]] = avail[usable]
+    Apos = np.maximum(A, 0.0)
+    rawcum = np.cumsum(A, axis=1)     # the reference's total_free per prefix
+    poscum = np.cumsum(Apos, axis=1)
+    feas_any = rawcum >= W
+    feasible = feas_any.any(axis=1)
+    k_first = np.argmax(feas_any, axis=1)        # first feasible prefix - 1
+    take = np.clip(W - (poscum - Apos), 0.0, Apos)
+    j_last = np.argmax(poscum >= W, axis=1)      # slowest type actually used
+
+    c_pack = int(min(max(Apos.max(initial=0.0), 0.0), W))
+    cumP = np.zeros((len(ps.keys), c_pack + 1))
+    np.cumsum(P[:, :c_pack], axis=1, out=cumP[:, 1:])
+    cumP_nk = np.zeros((N, K, c_pack + 1))
+    cumP_nk[ps.node_row[usable], rank[usable], :] = cumP[usable]
+    packed_cost = np.take_along_axis(
+        cumP_nk, take.astype(np.intp)[:, :, None], axis=2)[:, :, 0].sum(axis=1)
+    packed_payoff = u_table[j_last] - packed_cost
+
+    # ---- non-consolidated: spread across servers (line 25) -------------
+    spread = [None] * (K + 1)        # per type-prefix k = 1..K
+    if not job.single_node:          # HadarE copies never span nodes
+        # one stable argsort of price/throughput over every free device
+        # unit; each prefix's pool is the order restricted to its types
+        i_idx = np.arange(c_sp)
+        valid = usable[:, None] & (i_idx[None, :] < avail[:, None])
+        x_key = np.where(usable, x_types[np.minimum(rank, K - 1)], 1.0)
+        ratio = np.where(valid, P / x_key[:, None], np.inf)
+        flat_ratio = ratio.ravel()
+        order = np.argsort(flat_ratio, kind="stable")
+        key_of_flat = np.repeat(np.arange(len(ps.keys)), c_sp) \
+            if c_sp else np.zeros(0, dtype=np.intp)
+        sorted_key = key_of_flat[order]
+        sorted_rank = rank[sorted_key]
+        sorted_valid = valid.ravel()[order]
+        sorted_price = P.ravel()[order] if c_sp else np.zeros(0)
+        for k in range(1, K + 1):
+            elig = sorted_valid & (sorted_rank < k)
+            n_elig = int(elig.sum())
+            if n_elig < W:
                 continue
-            alloc: Alloc = {}
-            taken: Dict[Tuple[int, str], int] = {}
-            cost = 0.0
-            need = W
-            for r in allowed:
-                while need and avail.get((h, r), 0) - taken.get((h, r), 0) > 0:
-                    cost += _price_for(ps, free, h, r, taken.get((h, r), 0),
-                                       extra)
-                    taken[(h, r)] = taken.get((h, r), 0) + 1
-                    alloc[(h, r)] = alloc.get((h, r), 0) + 1
-                    need -= 1
-            if need == 0:
-                payoff = _estimate_payoff(job, alloc, cost, now, utility)
-                candidates.append(Candidate(alloc, cost, payoff,
-                                            job.bottleneck_rate(alloc)))
-
-        # ---- non-consolidated: spread across servers (line 25) ----------
-        if job.single_node:          # HadarE copies never span nodes
-            continue
-        pool = []
-        for (h, r), c in avail.items():
-            if r not in allowed:
-                continue
-            for i in range(c):
-                p = _price_for(ps, free, h, r, i, extra)
-                pool.append((p / job.throughput[r], p, h, r))
-        pool.sort(key=lambda t: t[0])
-        if len(pool) >= W:
-            alloc2: Alloc = {}
-            cost2 = 0.0
-            for _, p, h, r in pool[:W]:
-                alloc2[(h, r)] = alloc2.get((h, r), 0) + 1
-                cost2 += p
-            n_servers = len({h for (h, _), c in alloc2.items() if c})
+            chosen = elig & (np.cumsum(elig) <= W)
+            keys_m = sorted_key[chosen]
+            cost2 = float(sorted_price[chosen].sum())
+            jmax = int(sorted_rank[chosen].max())
+            n_servers = np.unique(ps.node_row[keys_m]).size
             if n_servers > 1:  # communication cost (lines 26-27)
                 # scaled to the job's achievable utility under this
                 # allocation: spreading is penalized proportionally
-                u_est = _estimate_payoff(job, alloc2, 0.0, now, utility)
-                cost2 += COMM_COST_FRAC * max(u_est, 0.0) * (n_servers - 1)
-            payoff2 = _estimate_payoff(job, alloc2, cost2, now, utility)
-            candidates.append(Candidate(alloc2, cost2, payoff2,
-                                        job.bottleneck_rate(alloc2)))
+                cost2 += COMM_COST_FRAC * max(u_table[jmax], 0.0) \
+                    * (n_servers - 1)
+            spread[k] = (u_table[jmax] - cost2, cost2, jmax, keys_m)
 
-    if not candidates:
+    # ---- pick the best candidate, in the reference enumeration order ---
+    # (per fastest-type prefix: consolidated nodes in node order, then the
+    # prefix's spread candidate; first maximum wins on ties)
+    best_payoff = -np.inf
+    best = None                      # ("pack", node_row) | ("spread", k)
+    for k in range(1, K + 1):
+        for h in np.nonzero(feasible & (k_first == k - 1))[0]:
+            if packed_payoff[h] > best_payoff:
+                best_payoff = float(packed_payoff[h])
+                best = ("pack", int(h))
+        if spread[k] is not None and spread[k][0] > best_payoff:
+            best_payoff = float(spread[k][0])
+            best = ("spread", k)
+
+    if best is None:
         return None
-    best = max(candidates, key=lambda c: c.payoff)
-    if best.payoff <= 0 and not force:   # mu_j <= 0 -> reject (lines 29-33)
+    if best_payoff <= 0 and not force:  # mu_j <= 0 -> reject (lines 29-33)
         return None
-    return best
+
+    if best[0] == "pack":
+        h = best[1]
+        node_id = ps.cluster.nodes[h].node_id
+        alloc: Alloc = {(node_id, types[j]): int(take[h, j])
+                        for j in range(K) if take[h, j] > 0}
+        return Candidate(alloc, float(packed_cost[h]), best_payoff,
+                         float(x_types[j_last[h]]))
+    _, cost2, jmax, keys_m = spread[best[1]]
+    counts = np.bincount(keys_m, minlength=len(ps.keys))
+    alloc2: Alloc = {ps.keys[m]: int(c)
+                     for m, c in enumerate(counts) if c}
+    return Candidate(alloc2, float(cost2), best_payoff,
+                     float(x_types[jmax]))
 
 
 def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
@@ -152,25 +219,33 @@ def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
     Exact select/skip DP with memoization for queues up to ``max_exact``;
     longer queues are processed in payoff-sorted greedy chunks (the paper
     handles 2048-job rounds in <7 min by incrementally allocating new jobs
-    only — same spirit)."""
+    only — same spirit).  The greedy path keeps the cluster state as
+    arrays and commits winners incrementally — no per-job dict rebuild."""
     if len(queue) > max_exact:
+        avail0 = ps.free_to_arr(free)
+        gamma0 = ps.gamma_arr.copy()
         # greedy pass: highest standalone payoff first
         order = []
         for j in queue:
-            c = find_alloc(j, free, ps, now, utility)
+            c = _find_alloc_arrays(j, avail0, gamma0, ps, now, utility,
+                                   force=False)
             if c:
                 # payoff *density* (per requested device): lets several
                 # small jobs beat one large one under contention
                 order.append((c.payoff / max(1, j.n_workers), j))
         order.sort(key=lambda t: -t[0])
         chosen: Dict[int, Candidate] = {}
-        extra: Dict = {}
+        avail = avail0
+        gamma = gamma0
         for _, j in order:
-            c = find_alloc(j, free, ps, now, utility, extra_gamma=extra)
+            c = _find_alloc_arrays(j, avail, gamma, ps, now, utility,
+                                   force=False)
             if c:
                 chosen[j.job_id] = c
                 for k, v in c.alloc.items():
-                    extra[k] = extra.get(k, 0) + v
+                    m = ps.key_index[k]
+                    avail[m] -= v
+                    gamma[m] += v
         return chosen
 
     memo: Dict = {}

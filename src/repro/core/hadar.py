@@ -21,6 +21,9 @@ from repro.core.utility import UtilityFn, effective_throughput
 
 class HadarScheduler(Scheduler):
     name = "hadar"
+    # incremental mode pins running jobs' allocations between completions,
+    # so rounds with an empty waiting queue are provably no-ops
+    stable_when_idle = True
 
     def __init__(self, horizon: float = 7 * 24 * 3600.0,
                  utility: UtilityFn = effective_throughput,
@@ -65,8 +68,6 @@ class HadarScheduler(Scheduler):
         for j in kept:                      # running jobs pin their gammas
             ps.commit(j.alloc)
             out[j.job_id] = j.alloc
-        free = cluster.free_map({k: v for j in kept
-                                 for k, v in (j.alloc or {}).items()})
         # merge duplicate keys across kept jobs
         used: Dict = {}
         for j in kept:

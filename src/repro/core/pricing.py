@@ -6,14 +6,75 @@ starts low enough to admit any job (k = U_min at gamma=0) and grows
 exponentially to U_max as the server fills, blocking low-utility jobs.
 alpha = max_r(1, ln(Umax/Umin)) gives the 2*alpha competitive bound
 (Theorem 2) — exposed for the property tests and the scalability bench.
+
+Besides the scalar `price()` entry point, PriceState owns the vectorized
+engine state: every (node, gpu_type) pair in the cluster is a *key* (in
+``Cluster.free_map`` order), and capacity / U-bounds / gamma live in
+aligned NumPy arrays so FIND_ALLOC can price whole clusters in a few
+array ops instead of per-device Python loops.  ``gamma`` stays a dict for
+API compatibility but write-through-syncs the ``gamma_arr`` vector, so
+`commit()`/`release()` (and direct dict mutation in tests) keep both
+views consistent incrementally.
 """
 from __future__ import annotations
 
 import math
 from typing import Dict, List, Tuple
 
+import numpy as np
+
 from repro.core.types import Cluster, Job
 from repro.core.utility import UtilityFn, effective_throughput
+
+
+class _GammaDict(dict):
+    """gamma as a dict, write-through-synced to ``PriceState.gamma_arr``."""
+
+    def __init__(self, ps: "PriceState"):
+        super().__init__()
+        self._ps = ps
+
+    def _sync(self, key, value) -> None:
+        idx = self._ps.key_index.get(key)
+        if idx is not None:
+            self._ps.gamma_arr[idx] = value
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self._sync(key, value)
+
+    def __delitem__(self, key):
+        super().__delitem__(key)
+        self._sync(key, 0)
+
+    def update(self, *args, **kwargs):
+        for k, v in dict(*args, **kwargs).items():
+            self[k] = v
+
+    def setdefault(self, key, default=None):
+        if key not in self:
+            self[key] = default
+        return self[key]
+
+    def pop(self, key, *default):
+        had = key in self
+        out = super().pop(key, *default)
+        if had:
+            self._sync(key, 0)
+        return out
+
+    def popitem(self):
+        key, value = super().popitem()
+        self._sync(key, 0)
+        return key, value
+
+    def __ior__(self, other):
+        self.update(other)
+        return self
+
+    def clear(self):
+        super().clear()
+        self._ps.gamma_arr[:] = 0
 
 
 class PriceState:
@@ -23,10 +84,11 @@ class PriceState:
         self.cluster = cluster
         self.utility = utility
         self.horizon = horizon
-        self.gamma: Dict[Tuple[int, str], int] = {}
         self.u_max: Dict[str, float] = {}
         self.u_min: Dict[str, float] = {}
         self._compute_bounds(jobs, now)
+        self._build_arrays()
+        self.gamma: Dict[Tuple[int, str], int] = _GammaDict(self)
 
     # ---- Eqs. 6-7 ------------------------------------------------------
     def _compute_bounds(self, jobs: List[Job], now: float) -> None:
@@ -55,6 +117,45 @@ class PriceState:
             self.u_max[r] = max(best, 1e-12)
             self.u_min[r] = max(min(worst / (4.0 * eta),
                                     self.u_max[r] / math.e), 1e-15)
+
+    # ---- vectorized engine state ---------------------------------------
+    def _build_arrays(self) -> None:
+        nodes = self.cluster.nodes
+        type_col = {r: i for i, r in enumerate(self.cluster.gpu_types)}
+        # key order == Cluster.free_map insertion order (node, then each
+        # node's own gpus order) — spread-candidate tie-breaking relies on it
+        self.keys: List[Tuple[int, str]] = []
+        caps, rows, cols = [], [], []
+        for row, n in enumerate(nodes):
+            for r, c in n.gpus.items():
+                self.keys.append((n.node_id, r))
+                caps.append(float(c))
+                rows.append(row)
+                cols.append(type_col[r])
+        self.key_index = {k: i for i, k in enumerate(self.keys)}
+        self.cap_arr = np.array(caps)
+        self.node_row = np.array(rows, dtype=np.intp)   # row in `nodes`
+        self.type_col = np.array(cols, dtype=np.intp)   # col in gpu_types
+        self.n_node_rows = len(nodes)
+        self.umin_arr = np.array([self.u_min[r] for (_, r) in self.keys])
+        self.umax_arr = np.array([self.u_max[r] for (_, r) in self.keys])
+        self.q_arr = self.umax_arr / self.umin_arr
+        self.gamma_arr = np.zeros(len(self.keys))
+        self._cap_by_key = dict(zip(self.keys, (int(c) for c in caps)))
+
+    def free_to_arr(self, free: Dict[Tuple[int, str], int]) -> np.ndarray:
+        """Project a free-count dict onto the key axis."""
+        return np.array([float(free.get(k, 0)) for k in self.keys])
+
+    def unit_prices(self, gamma_arr: np.ndarray,
+                    max_units: int) -> np.ndarray:
+        """unit[m, i] = marginal price of the (i+1)-th extra device on key
+        m given occupancy ``gamma_arr`` — Eq. 5 for a whole cluster at
+        once.  Shape (M, max_units)."""
+        i = np.arange(max_units)
+        expo = ((gamma_arr[:, None] + i[None, :])
+                / np.maximum(self.cap_arr, 1.0)[:, None])
+        return self.umin_arr[:, None] * self.q_arr[:, None] ** expo
 
     # ---- Eq. 5 ----------------------------------------------------------
     def price(self, node_id: int, gpu_type: str, cap: int,

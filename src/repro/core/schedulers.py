@@ -15,6 +15,12 @@ from repro.core.types import Alloc, Cluster, Job, alloc_size
 class Scheduler:
     name = "base"
     preemptive = True
+    # True => when every active job already holds an allocation and no
+    # completion/arrival occurred, schedule() provably returns the same
+    # allocations again; the simulator then fast-forwards to the next
+    # event instead of re-consulting the scheduler every round.  Gavel and
+    # Tiresias rotate allocations round-by-round, so they must stay False.
+    stable_when_idle = False
 
     def schedule(self, now: float, round_len: float, jobs: List[Job],
                  cluster: Cluster) -> Dict[int, Alloc]:
@@ -99,31 +105,67 @@ class GavelScheduler(Scheduler):
         types = cluster.gpu_types
         cap = cluster.capacity()
         J = len(jobs)
-        Y = np.zeros((J, len(types)))
+        R = len(types)
+        Y = np.zeros((J, R))
         cap_left = np.array([float(cap[r]) for r in types])
         frac_left = np.ones(J)
         norm = np.array([[j.throughput.get(r, 0.0) for r in types]
                          for j in jobs])
         norm = norm / np.maximum(norm.max(axis=1, keepdims=True), 1e-9)
+        w_arr = np.array([float(j.n_workers) for j in jobs])
+        ji_all = np.arange(J)
         for _ in range(iters):
-            progress = False
+            # While capacity is plentiful the sweep order cannot change any
+            # job's choice, so the whole sweep collapses to one vector
+            # step; near exhaustion (a type may cross some job's
+            # step*W eligibility threshold mid-sweep) fall back to the
+            # order-sensitive scalar sweep.
+            active = frac_left > 1e-9
+            eligible = (norm > 0) & (cap_left[None, :] >= step
+                                     * w_arr[:, None])
+            masked = np.where(eligible, norm, -1.0)
+            best_r = np.argmax(masked, axis=1)
+            doers = active & (masked[ji_all, best_r] > 0)
+            if not doers.any():
+                break
+            d = np.minimum(step, frac_left)
+            taken = np.bincount(best_r[doers], weights=(d * w_arr)[doers],
+                                minlength=R)
+            # largest gang among jobs eligible for each type at sweep start:
+            # if end-of-sweep capacity stays above every such threshold, no
+            # eligibility bit can have flipped mid-sweep.  The 1e-9 slack
+            # routes knife-edge sweeps (caps landing exactly on a step*W
+            # boundary) to the scalar path — real slack is ≥ one step.
+            w_elig = np.where(eligible, w_arr[:, None], 0.0).max(axis=0)
             # least-served job first -> approximate max-min fairness
             order = np.argsort(1.0 - frac_left)
+            if (cap_left - taken >= step * w_elig + 1e-9).all():
+                np.add.at(Y, (ji_all[doers], best_r[doers]), d[doers])
+                frac_left[doers] -= d[doers]
+                # capacity must drain in sweep order with sequential
+                # subtraction — a vectorized sum drifts in the last bits
+                # and caps sit exactly on eligibility thresholds
+                xs = d * w_arr
+                for ji in order:
+                    if doers[ji]:
+                        cap_left[best_r[ji]] -= xs[ji]
+                continue
+            progress = False
             for ji in order:
                 if frac_left[ji] <= 1e-9:
                     continue
                 w = jobs[ji].n_workers
-                best, best_r = -1.0, -1
-                for ri in range(len(types)):
+                best, best_ri = -1.0, -1
+                for ri in range(R):
                     if cap_left[ri] >= step * w and norm[ji, ri] > best \
                             and norm[ji, ri] > 0:
-                        best, best_r = norm[ji, ri], ri
-                if best_r < 0:
+                        best, best_ri = norm[ji, ri], ri
+                if best_ri < 0:
                     continue
-                d = min(step, frac_left[ji], cap_left[best_r] / w)
-                Y[ji, best_r] += d
-                frac_left[ji] -= d
-                cap_left[best_r] -= d * w
+                dd = min(step, frac_left[ji], cap_left[best_ri] / w)
+                Y[ji, best_ri] += dd
+                frac_left[ji] -= dd
+                cap_left[best_ri] -= dd * w
                 progress = True
             if not progress:
                 break
@@ -201,6 +243,7 @@ class TiresiasScheduler(Scheduler):
 class YarnCSScheduler(Scheduler):
     name = "yarn-cs"
     preemptive = False
+    stable_when_idle = True   # non-preemptive: running jobs keep allocs
 
     def schedule(self, now, round_len, jobs, cluster):
         taken: Dict = {}

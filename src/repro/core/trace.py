@@ -100,6 +100,35 @@ def testbed_cluster() -> Cluster:
     ])
 
 
+def multi_cluster(n_pods: int = 3, nodes_per_pod: int = 5,
+                  gpus_per_node: int = 4,
+                  pod_types: Optional[List[str]] = None,
+                  mixed_frac: float = 0.0, seed: int = 0) -> Cluster:
+    """Fleet of heterogeneous sub-clusters: each pod is a homogeneous
+    node group of one GPU generation (new DGX pods next to legacy racks).
+    ``mixed_frac`` > 0 converts that fraction of nodes per pod into
+    mixed-type boxes (half this pod's type, half the next pod's) — the
+    awkward topologies task-level heterogeneity awareness exploits."""
+    pod_types = pod_types or ["v100", "p100", "k80", "t4", "rtx3090"]
+    rng = np.random.RandomState(seed)
+    nodes: List[Node] = []
+    nid = 0
+    for p in range(n_pods):
+        r = pod_types[p % len(pod_types)]
+        r_next = pod_types[(p + 1) % len(pod_types)]
+        n_mixed = int(round(nodes_per_pod * mixed_frac))
+        for i in range(nodes_per_pod):
+            if i < n_mixed and r != r_next:
+                half = max(1, gpus_per_node // 2)
+                gpus = {r: half, r_next: gpus_per_node - half}
+            else:
+                gpus = {r: gpus_per_node}
+            nodes.append(Node(nid, gpus,
+                              pcie_scaling=float(rng.choice([0.8, 1.0]))))
+            nid += 1
+    return Cluster(nodes)
+
+
 # ---------------------------------------------------------------------------
 # traces
 # ---------------------------------------------------------------------------
@@ -117,10 +146,16 @@ def motivation_jobs() -> List[Job]:
 
 def philly_trace(n_jobs: int = 480, seed: int = 0,
                  types: Optional[List[str]] = None,
-                 all_at_start: bool = True) -> List[Job]:
+                 all_at_start: bool = True,
+                 arrival_pattern: Optional[str] = None) -> List[Job]:
     """Synthetic Microsoft-trace-like workload (§IV-A): size classes
     sampled uniformly, GPU demand heavy-tailed in {1,2,4,8}, models per
-    Table II, runtimes drawn from the class's GPU-hour range."""
+    Table II, runtimes drawn from the class's GPU-hour range.
+
+    ``arrival_pattern`` overlays a non-trivial arrival process (see
+    ``bursty_arrivals`` / ``diurnal_arrivals``) on the jobs; the default
+    ``None`` keeps the original all-at-start / uniform behaviour (and the
+    exact RNG stream) for reproducibility."""
     rng = np.random.RandomState(seed)
     types = types or ["v100", "p100", "k80"]
     models = ["resnet50", "resnet18", "lstm", "cyclegan", "transformer"]
@@ -143,7 +178,48 @@ def philly_trace(n_jobs: int = 480, seed: int = 0,
                         epochs=max(1, int(total_iters // 100)),
                         iters_per_epoch=100,
                         throughput=tp, model=model, size=size))
+    if arrival_pattern is not None:
+        gens = {"bursty": bursty_arrivals, "diurnal": diurnal_arrivals}
+        arrivals = gens[arrival_pattern](n_jobs, seed=seed + 1)
+        for j, a in zip(jobs, arrivals):
+            j.arrival = float(a)
     return jobs
+
+
+# ---------------------------------------------------------------------------
+# arrival processes (Philly/Helios characterization: bursty, long-tailed,
+# strongly diurnal — Hu et al. 2021)
+# ---------------------------------------------------------------------------
+
+def bursty_arrivals(n: int, seed: int = 0, n_bursts: int = 8,
+                    span: float = 8 * 3600.0,
+                    burst_sigma: float = 180.0) -> np.ndarray:
+    """Submission storms: jobs clump around a few burst centers whose
+    sizes are heavy-tailed (a user re-submitting a sweep, a pipeline
+    firing) — the regime where incremental scheduling pays off."""
+    rng = np.random.RandomState(seed)
+    centers = np.sort(rng.uniform(0.0, span, n_bursts))
+    weights = rng.pareto(1.5, n_bursts) + 1.0     # long-tailed burst sizes
+    which = rng.choice(n_bursts, size=n, p=weights / weights.sum())
+    t = centers[which] + rng.normal(0.0, burst_sigma, n)
+    return np.sort(np.clip(t, 0.0, span))
+
+
+def diurnal_arrivals(n: int, seed: int = 0, days: int = 2,
+                     period: float = 86400.0, peak_hour: float = 14.0,
+                     trough_frac: float = 0.15) -> np.ndarray:
+    """Inhomogeneous Poisson by thinning: a sinusoidal day/night cycle
+    peaking at ``peak_hour`` with the night rate at ``trough_frac`` of
+    the peak — the Helios/Philly diurnal load shape."""
+    rng = np.random.RandomState(seed)
+    span = days * period
+    out: List[float] = []
+    while len(out) < n:
+        t = rng.uniform(0.0, span, max(n, 64))
+        phase = 2.0 * np.pi * (t / period - peak_hour / 24.0)
+        rate = trough_frac + (1.0 - trough_frac) * 0.5 * (1 + np.cos(phase))
+        out.extend(t[rng.uniform(0.0, 1.0, t.size) < rate].tolist())
+    return np.sort(np.array(out[:n]))
 
 
 # workload mixes of §VI-B (M-1 .. M-12)

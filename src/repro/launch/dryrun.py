@@ -100,6 +100,8 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # newer jax returns a single dict, older a list of per-computation dicts
+    cost = cost[0] if isinstance(cost, list) else cost
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     coll_scoped = collective_bytes_by_scope(hlo)

@@ -1,0 +1,361 @@
+"""Verbatim scalar reference of the pre-vectorization scheduling engine.
+
+This is the seed implementation of FIND_ALLOC / DP_allocation, Gavel's
+water-filling, and the round-based simulator loop, kept as the oracle for
+the engine-equivalence tests: the vectorized engine in
+``repro.core.{dp,pricing,schedulers,simulator}`` must reproduce these
+decisions exactly on fixed seeds.  Do not "optimize" this module — its
+only job is to stay identical to the original semantics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dp import COMM_COST_FRAC, Candidate
+from repro.core.pricing import PriceState
+from repro.core.simulator import (RESTART_PENALTY, RoundRecord, SimResult,
+                                  _alloc_equal)
+from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
+from repro.core.utility import UtilityFn
+
+
+# ---------------------------------------------------------------------------
+# seed dp.py
+# ---------------------------------------------------------------------------
+
+def _price_for(ps: PriceState, free: Dict, node_id: int, r: str,
+               taken: int, extra: Dict) -> float:
+    cap = 0
+    for n in ps.cluster.nodes:
+        if n.node_id == node_id:
+            cap = n.gpus.get(r, 0)
+    g = ps.gamma.get((node_id, r), 0) + extra.get((node_id, r), 0) + taken
+    return ps.price(node_id, r, cap, gamma_override=g)
+
+
+def _estimate_payoff(job: Job, alloc: Alloc, cost: float, now: float,
+                     utility: UtilityFn) -> float:
+    rate = job.bottleneck_rate(alloc)
+    if rate <= 0:
+        return -float("inf")
+    t_done = job.remaining_iters / (rate * max(1, sum(alloc.values())))
+    u = utility(job, max(now + t_done - job.arrival, 1e-9))
+    return u - cost
+
+
+def find_alloc(job: Job, free: Dict[Tuple[int, str], int], ps: PriceState,
+               now: float, utility: UtilityFn,
+               extra_gamma: Optional[Dict] = None,
+               force: bool = False) -> Optional[Candidate]:
+    extra = extra_gamma or {}
+    W = job.n_workers
+    types = sorted([r for r in ps.cluster.gpu_types
+                    if job.throughput.get(r, 0) > 0],
+                   key=lambda r: -job.throughput[r])
+    if not types:
+        return None
+
+    avail = {k: free.get(k, 0) - extra.get(k, 0) for k in free}
+    candidates: List[Candidate] = []
+
+    for k in range(1, len(types) + 1):
+        allowed = types[:k]
+
+        # consolidated: all tasks on one server
+        for node in ps.cluster.nodes:
+            h = node.node_id
+            total_free = sum(avail.get((h, r), 0) for r in allowed)
+            if total_free < W:
+                continue
+            alloc: Alloc = {}
+            taken: Dict[Tuple[int, str], int] = {}
+            cost = 0.0
+            need = W
+            for r in allowed:
+                while need and avail.get((h, r), 0) - taken.get((h, r), 0) > 0:
+                    cost += _price_for(ps, free, h, r, taken.get((h, r), 0),
+                                       extra)
+                    taken[(h, r)] = taken.get((h, r), 0) + 1
+                    alloc[(h, r)] = alloc.get((h, r), 0) + 1
+                    need -= 1
+            if need == 0:
+                payoff = _estimate_payoff(job, alloc, cost, now, utility)
+                candidates.append(Candidate(alloc, cost, payoff,
+                                            job.bottleneck_rate(alloc)))
+
+        # non-consolidated: spread across servers
+        if job.single_node:
+            continue
+        pool = []
+        for (h, r), c in avail.items():
+            if r not in allowed:
+                continue
+            for i in range(c):
+                p = _price_for(ps, free, h, r, i, extra)
+                pool.append((p / job.throughput[r], p, h, r))
+        pool.sort(key=lambda t: t[0])
+        if len(pool) >= W:
+            alloc2: Alloc = {}
+            cost2 = 0.0
+            for _, p, h, r in pool[:W]:
+                alloc2[(h, r)] = alloc2.get((h, r), 0) + 1
+                cost2 += p
+            n_servers = len({h for (h, _), c in alloc2.items() if c})
+            if n_servers > 1:
+                u_est = _estimate_payoff(job, alloc2, 0.0, now, utility)
+                cost2 += COMM_COST_FRAC * max(u_est, 0.0) * (n_servers - 1)
+            payoff2 = _estimate_payoff(job, alloc2, cost2, now, utility)
+            candidates.append(Candidate(alloc2, cost2, payoff2,
+                                        job.bottleneck_rate(alloc2)))
+
+    if not candidates:
+        return None
+    best = max(candidates, key=lambda c: c.payoff)
+    if best.payoff <= 0 and not force:
+        return None
+    return best
+
+
+def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
+                  ps: PriceState, now: float, utility: UtilityFn,
+                  max_exact: int = 64) -> Dict[int, Candidate]:
+    if len(queue) > max_exact:
+        order = []
+        for j in queue:
+            c = find_alloc(j, free, ps, now, utility)
+            if c:
+                order.append((c.payoff / max(1, j.n_workers), j))
+        order.sort(key=lambda t: -t[0])
+        chosen: Dict[int, Candidate] = {}
+        extra: Dict = {}
+        for _, j in order:
+            c = find_alloc(j, free, ps, now, utility, extra_gamma=extra)
+            if c:
+                chosen[j.job_id] = c
+                for k, v in c.alloc.items():
+                    extra[k] = extra.get(k, 0) + v
+        return chosen
+
+    memo: Dict = {}
+
+    def key_of(extra: Dict) -> Tuple:
+        return tuple(sorted((k, v) for k, v in extra.items() if v))
+
+    def rec(idx: int, extra: Dict) -> Tuple[float, Dict[int, Candidate]]:
+        if idx >= len(queue):
+            return 0.0, {}
+        k = (idx, key_of(extra))
+        if k in memo:
+            return memo[k]
+        best_v, best_sel = rec(idx + 1, extra)
+        job = queue[idx]
+        cand = find_alloc(job, free, ps, now, utility, extra_gamma=extra)
+        if cand is not None:
+            extra2 = dict(extra)
+            for kk, v in cand.alloc.items():
+                extra2[kk] = extra2.get(kk, 0) + v
+            v2, sel2 = rec(idx + 1, extra2)
+            if cand.payoff + v2 > best_v:
+                best_v = cand.payoff + v2
+                best_sel = dict(sel2)
+                best_sel[job.job_id] = cand
+        memo[k] = (best_v, best_sel)
+        return memo[k]
+
+    _, sel = rec(0, {})
+    return sel
+
+
+# ---------------------------------------------------------------------------
+# seed hadar.py (schedule body, post dead-free_map fix — no behaviour delta)
+# ---------------------------------------------------------------------------
+
+class ReferenceHadarScheduler:
+    name = "hadar"
+    preemptive = True
+    stable_when_idle = False   # force the reference simulator path
+
+    def __init__(self, horizon: float = 7 * 24 * 3600.0,
+                 reallocate_on_free: bool = True,
+                 max_exact_dp: int = 24,
+                 work_conserving: bool = True):
+        from repro.core.utility import effective_throughput
+        self.horizon = horizon
+        self.utility = effective_throughput
+        self.reallocate_on_free = reallocate_on_free
+        self.max_exact_dp = max_exact_dp
+        self.work_conserving = work_conserving
+        self._had_completion = True
+
+    def note_completion(self) -> None:
+        self._had_completion = True
+
+    def schedule(self, now, round_len, jobs, cluster):
+        active = [j for j in jobs if not j.is_done() and j.arrival <= now]
+        out: Dict[int, Alloc] = {}
+        full_pass = self.reallocate_on_free and self._had_completion
+        self._had_completion = False
+        running = [j for j in active if j.alloc]
+        waiting = [j for j in active if not j.alloc]
+        if full_pass:
+            queue = sorted(active, key=lambda j: (j.arrival, j.job_id))
+            kept: List[Job] = []
+        else:
+            queue = sorted(waiting, key=lambda j: (j.arrival, j.job_id))
+            kept = running
+        ps = PriceState(cluster, active, self.horizon, self.utility, now)
+        for j in kept:
+            ps.commit(j.alloc)
+            out[j.job_id] = j.alloc
+        used: Dict = {}
+        for j in kept:
+            for k, v in (j.alloc or {}).items():
+                used[k] = used.get(k, 0) + v
+        free = cluster.free_map(used)
+        sel = dp_allocation(queue, free, ps, now, self.utility,
+                            max_exact=self.max_exact_dp)
+        extra: Dict = {}
+        for jid, cand in sel.items():
+            out[jid] = cand.alloc
+            ps.commit(cand.alloc)
+            for k, v in cand.alloc.items():
+                extra[k] = extra.get(k, 0) + v
+        if self.work_conserving:
+            for j in sorted(queue, key=lambda j: (j.arrival, j.job_id)):
+                if j.job_id in out:
+                    continue
+                cand = find_alloc(j, free, ps, now, self.utility,
+                                  extra_gamma=extra, force=True)
+                if cand is None:
+                    continue
+                out[j.job_id] = cand.alloc
+                ps.commit(cand.alloc)
+                for k, v in cand.alloc.items():
+                    extra[k] = extra.get(k, 0) + v
+        return out
+
+
+# ---------------------------------------------------------------------------
+# seed schedulers.py (Gavel water-filling)
+# ---------------------------------------------------------------------------
+
+def allocation_matrix(jobs: List[Job], cluster: Cluster,
+                      iters: int = 40, step: float = 0.05) -> np.ndarray:
+    types = cluster.gpu_types
+    cap = cluster.capacity()
+    J = len(jobs)
+    Y = np.zeros((J, len(types)))
+    cap_left = np.array([float(cap[r]) for r in types])
+    frac_left = np.ones(J)
+    norm = np.array([[j.throughput.get(r, 0.0) for r in types]
+                     for j in jobs])
+    norm = norm / np.maximum(norm.max(axis=1, keepdims=True), 1e-9)
+    for _ in range(iters):
+        progress = False
+        order = np.argsort(1.0 - frac_left)
+        for ji in order:
+            if frac_left[ji] <= 1e-9:
+                continue
+            w = jobs[ji].n_workers
+            best, best_r = -1.0, -1
+            for ri in range(len(types)):
+                if cap_left[ri] >= step * w and norm[ji, ri] > best \
+                        and norm[ji, ri] > 0:
+                    best, best_r = norm[ji, ri], ri
+            if best_r < 0:
+                continue
+            d = min(step, frac_left[ji], cap_left[best_r] / w)
+            Y[ji, best_r] += d
+            frac_left[ji] -= d
+            cap_left[best_r] -= d * w
+            progress = True
+        if not progress:
+            break
+    return Y
+
+
+# ---------------------------------------------------------------------------
+# seed simulator.py (every round consults the scheduler; no fast-forward)
+# ---------------------------------------------------------------------------
+
+def simulate(scheduler, jobs: List[Job], cluster: Cluster,
+             round_len: float = 360.0, max_rounds: int = 20000,
+             restart_penalty: float = RESTART_PENALTY) -> SimResult:
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    for j in jobs:
+        j.done_iters = 0.0
+        j.finish_time = None
+        j.attained_service = 0.0
+        j.alloc = None
+        j.restarts = 0
+    total_gpus = cluster.total_gpus()
+    n_nodes = len(cluster.nodes)
+    rounds: List[RoundRecord] = []
+    t = 0.0
+    for rnd in range(max_rounds):
+        if all(j.is_done() for j in jobs):
+            break
+        t0 = time.perf_counter()
+        desired = scheduler.schedule(t, round_len, jobs, cluster)
+        sched_s = time.perf_counter() - t0
+
+        changed = 0
+        busy_gpu_time = 0.0
+        busy_nodes = set()
+        any_completed = False
+        for j in jobs:
+            new = desired.get(j.job_id)
+            if j.is_done():
+                j.alloc = None
+                continue
+            if not _alloc_equal(j.alloc, new):
+                if j.alloc is not None or new is not None:
+                    changed += 1
+                if new is not None and j.alloc is not None:
+                    j.restarts += 1
+                penalty = restart_penalty if new else 0.0
+            else:
+                penalty = 0.0
+            j.alloc = new
+            if not new:
+                continue
+            rate = j.bottleneck_rate(new)
+            w = alloc_size(new)
+            eff = max(0.0, round_len - penalty)
+            iters_possible = rate * w * eff
+            need = j.remaining_iters
+            if iters_possible >= need and rate * w > 0:
+                used = penalty + need / (rate * w)
+                j.done_iters = j.total_iters
+                j.finish_time = t + used
+                any_completed = True
+                busy_gpu_time += w * used
+                busy_nodes.update(alloc_nodes(new))
+                j.attained_service += w * used
+            else:
+                j.done_iters += iters_possible
+                busy_gpu_time += w * round_len
+                busy_nodes.update(alloc_nodes(new))
+                j.attained_service += w * round_len
+
+        if any_completed and hasattr(scheduler, "note_completion"):
+            scheduler.note_completion()
+
+        n_active = sum(1 for j in jobs
+                       if not j.is_done() and j.arrival <= t)
+        n_running = sum(1 for j in jobs if j.alloc and not j.is_done())
+        rounds.append(RoundRecord(
+            t=t,
+            gru=busy_gpu_time / (total_gpus * round_len),
+            cru=len(busy_nodes) / max(1, n_nodes),
+            running=n_running,
+            waiting=n_active - n_running,
+            changed=changed,
+            sched_seconds=sched_s))
+        t += round_len
+
+    total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
+    return SimResult(scheduler.name, rounds, jobs, total)

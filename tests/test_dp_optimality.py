@@ -4,7 +4,10 @@ optimum over single-round allocations (and usually equal)."""
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI image — vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.dp import dp_allocation, find_alloc
 from repro.core.pricing import PriceState

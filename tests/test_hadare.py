@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI image — vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hadare import (MAX_JOB_COUNT, JobTracker, fork_job,
                                simulate_hadare)

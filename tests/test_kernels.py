@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI image — vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention as fa_kernel

@@ -82,6 +82,7 @@ DRYRUN_SNIPPET = textwrap.dedent("""
         compiled = jax.jit(make_step_fn(cfg, shape),
                            in_shardings=shardings).lower(*args).compile()
     cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
     print("RESULT", json.dumps({{"flops": float(cost.get("flops", -1))}}))
 """)
 

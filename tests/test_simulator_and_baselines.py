@@ -1,7 +1,10 @@
 """Simulator conservation laws + baseline schedulers + the paper's
 motivational example (Fig. 1) as an executable assertion."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI image — vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.hadar import HadarScheduler
 from repro.core.schedulers import (GavelScheduler, TiresiasScheduler,

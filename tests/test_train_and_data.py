@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI image — vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM, batch_for
