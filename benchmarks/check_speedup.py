@@ -1,17 +1,30 @@
 """Perf smoke gate: fail if the vectorized engine's per-round scheduling
-latency at n=256 regresses more than 2x against the recorded baseline.
+latency at n=256 regresses more than 2x against the recorded baseline,
+or if the event engine loses its sparse-trace advantage over the
+round-based path.
 
 Usage:
-  python benchmarks/check_speedup.py            # gate against baseline
-  python benchmarks/check_speedup.py --record   # re-record the baseline
+  python benchmarks/check_speedup.py            # gate against baselines
+  python benchmarks/check_speedup.py --record   # re-record the baselines
+  python benchmarks/check_speedup.py --quick    # smoke over a tiny trace
 
-To stay machine-independent, the gate compares *normalized* latency:
-each measurement is divided by the runtime of the vendored scalar
-reference engine (tests/_seed_reference.py) on the same machine in the
-same process.  The committed baseline JSON records both numbers from the
-reference machine; a 2x margin on the ratio-of-ratios catches an
-accidental return of the per-device Python loops (a ~30x cliff) without
-tripping on slower CI hardware."""
+To stay machine-independent, the gates compare *normalized* numbers:
+
+- scheduling latency is divided by the runtime of the vendored scalar
+  reference engine (tests/_seed_reference.py) on the same machine in
+  the same process.  A 2x margin on the ratio-of-ratios catches an
+  accidental return of the per-device Python loops (a ~30x cliff)
+  without tripping on slower CI hardware.
+- the event engine is compared against the round engine on the same
+  sparse trace in the same process (baseline_event_sparse.json).  The
+  gate enforces the absolute acceptance bar — event wall-clock at most
+  1/5 of the round path — plus a 2x regression margin on the recorded
+  ratio.
+
+``--quick`` runs a seconds-scale smoke over a tiny trace: both engines
+and the HadarE backend must complete every job and agree within the
+documented quantization tolerance.  No baselines are touched.
+"""
 import argparse
 import json
 import os
@@ -24,9 +37,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
 
 BASELINE = os.path.join(os.path.dirname(__file__),
                         "baseline_fig5_n256.json")
+EVENT_BASELINE = os.path.join(os.path.dirname(__file__),
+                              "baseline_event_sparse.json")
 N_JOBS = 256
 REPEATS = 3
 MAX_REGRESSION = 2.0
+EVENT_MAX_FRACTION = 0.2        # event engine must stay <= 1/5 round path
+SPARSE_N_JOBS = 32
+SPARSE_ROUND_LEN = 60.0
 
 
 def _best_round(mk_sched, jobs_factory, cluster) -> float:
@@ -56,22 +74,72 @@ def measure():
     }
 
 
+def measure_event(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN):
+    """Round vs event engine wall-clock on one sparse fig5 trace — the
+    same harness the fig5 steady-state benchmark reports from."""
+    from benchmarks.fig5_scalability import measure_sparse
+
+    rows = measure_sparse(n_jobs, round_len, repeats=REPEATS)
+    return {k: rows[k] for k in ("n_jobs", "round_len", "round_wall_s",
+                                 "event_wall_s")}
+
+
+def quick_smoke() -> None:
+    """Tiny-trace smoke: engines + HadarE backend complete and agree."""
+    from repro.core.hadar import HadarScheduler
+    from repro.core.hadare import simulate_hadare
+    from repro.core.trace import mix_jobs, philly_trace, testbed_cluster
+    from repro.core.trace import simulation_cluster
+    from repro.sim.engine import simulate_events, simulate_rounds
+
+    cluster = simulation_cluster()
+    L = 360.0
+    rr = simulate_rounds(HadarScheduler(), philly_trace(n_jobs=8, seed=9),
+                         cluster, round_len=L, max_rounds=8000)
+    re = simulate_events(HadarScheduler(), philly_trace(n_jobs=8, seed=9),
+                         cluster, round_len=L)
+    assert all(j.finish_time is not None for j in rr.jobs), "round engine"
+    assert all(j.finish_time is not None for j in re.jobs), "event engine"
+    drift = abs(re.total_seconds - rr.total_seconds)
+    assert drift <= max(2 * L, 0.02 * rr.total_seconds), \
+        f"TTD drift {drift:.1f}s exceeds quantization tolerance"
+    tb = testbed_cluster()
+    rh = simulate_hadare(mix_jobs("M-3", tb), tb, round_len=90.0)
+    assert all(p.finish_time is not None for p in rh.jobs), "hadare"
+    print(f"quick smoke passed: round TTD {rr.total_seconds:.0f}s, "
+          f"event TTD {re.total_seconds:.0f}s "
+          f"({re.n_events} events, {re.sched_calls} schedule calls), "
+          f"hadare TTD {rh.total_seconds:.0f}s")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--record", action="store_true",
-                    help="re-record the baseline instead of gating")
+                    help="re-record the baselines instead of gating")
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-scale smoke over a tiny trace; "
+                         "no baseline comparison")
     args = ap.parse_args()
 
+    if args.quick:
+        quick_smoke()
+        return
+
+    if not args.record and not os.path.exists(BASELINE):
+        print(f"no baseline at {BASELINE}; run with --record first")
+        raise SystemExit(2)
+
     current = measure()
+    event = measure_event()
     if args.record:
         with open(BASELINE, "w") as f:
             json.dump({"n_jobs": N_JOBS, **current}, f, indent=1)
-        print(f"recorded baseline: {current}")
+        with open(EVENT_BASELINE, "w") as f:
+            json.dump(event, f, indent=1)
+        print(f"recorded baselines: {current} | {event}")
         return
 
-    if not os.path.exists(BASELINE):
-        print(f"no baseline at {BASELINE}; run with --record first")
-        raise SystemExit(2)
+    failed = False
     with open(BASELINE) as f:
         base = json.load(f)
 
@@ -86,8 +154,34 @@ def main():
     if ratio > MAX_REGRESSION:
         print(f"FAIL: normalized scheduling latency regressed "
               f">{MAX_REGRESSION}x vs baseline")
+        failed = True
+
+    cur_frac = event["event_wall_s"] / max(event["round_wall_s"], 1e-9)
+    print(f"event engine: {event['event_wall_s']:.3f}s vs round path "
+          f"{event['round_wall_s']:.3f}s on the sparse trace "
+          f"({1 / max(cur_frac, 1e-9):.0f}x)")
+    if cur_frac > EVENT_MAX_FRACTION:
+        print(f"FAIL: event engine wall-clock {cur_frac:.2f} of the round "
+              f"path (must be <= {EVENT_MAX_FRACTION})")
+        failed = True
+    if os.path.exists(EVENT_BASELINE):
+        with open(EVENT_BASELINE) as f:
+            ebase = json.load(f)
+        base_frac = ebase["event_wall_s"] / max(ebase["round_wall_s"], 1e-9)
+        eratio = cur_frac / max(base_frac, 1e-9)
+        print(f"event/round fraction {cur_frac:.4f} vs baseline "
+              f"{base_frac:.4f} — ratio {eratio:.2f}x")
+        if eratio > MAX_REGRESSION:
+            print(f"FAIL: event-engine advantage regressed "
+                  f">{MAX_REGRESSION}x vs baseline")
+            failed = True
+    else:
+        print(f"no event baseline at {EVENT_BASELINE}; "
+              f"run with --record to add one")
+
+    if failed:
         raise SystemExit(1)
-    print("speedup gate passed")
+    print("speedup gates passed")
 
 
 if __name__ == "__main__":

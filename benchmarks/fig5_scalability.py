@@ -6,7 +6,12 @@ decision.
 Beyond the original all-at-start Philly trace, the vectorized engine is
 also timed on a bursty arrival overlay (Philly/Helios characterization)
 scheduled on a multi-pod topology with mixed-type nodes — the worst case
-for consolidated packing."""
+for consolidated packing.
+
+``run_steady`` measures sustained simulation throughput with arrivals
+flowing (not just one scheduling decision): the round engine's
+rounds/sec and the event engine's events/sec on the same sparse trace,
+plus the wall-clock ratio between the two paths."""
 import time
 
 from benchmarks.common import emit, save_json, timed
@@ -14,6 +19,8 @@ from repro.core.hadar import HadarScheduler
 from repro.core.schedulers import GavelScheduler
 from repro.core.trace import multi_cluster, philly_trace
 from repro.core.types import Cluster, Node
+from repro.sim.adapters import CountingScheduler
+from repro.sim.engine import simulate_events, simulate_rounds
 
 
 def grown_cluster(n_jobs: int) -> Cluster:
@@ -63,5 +70,73 @@ def run(sizes=(32, 64, 128, 256, 512, 1024, 2048)):
     return rows
 
 
+def sparse_trace(n_jobs: int, round_len: float, seed: int = 5,
+                 gap_factor: float = 600.0):
+    """Arrivals stretched so inter-arrival gaps average >= ``gap_factor``
+    times ``round_len`` — the regime where round quantization wastes
+    O(max_rounds) work.  The default gap (~10 h of simulated time at the
+    60 s round) is on the scale of the jobs' own durations, i.e. the
+    cluster is mostly uncontended: a bursty backlogged queue is the
+    *dense* regime the round engine already handles."""
+    jobs = philly_trace(n_jobs=n_jobs, seed=seed, all_at_start=False)
+    span = max(j.arrival for j in jobs) or 1.0
+    stretch = gap_factor * round_len * n_jobs / span
+    for j in jobs:
+        j.arrival *= stretch
+    return jobs
+
+
+def measure_sparse(n_jobs: int, round_len: float, repeats: int = 1):
+    """Shared round-vs-event timing harness on one sparse trace (also
+    drives the check_speedup.py perf gate — keep the regimes in sync by
+    construction).  Wall-clocks are best-of-``repeats``; counts and TTDs
+    come from the (deterministic) last run."""
+    cluster = grown_cluster(n_jobs)
+    best_r = best_e = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        rr = simulate_rounds(HadarScheduler(), sparse_trace(n_jobs,
+                                                            round_len),
+                             cluster, round_len=round_len,
+                             max_rounds=2000000)
+        best_r = min(best_r, time.perf_counter() - t0)
+
+        inner = CountingScheduler(HadarScheduler())
+        t0 = time.perf_counter()
+        re = simulate_events(inner, sparse_trace(n_jobs, round_len),
+                             cluster, round_len=round_len)
+        best_e = min(best_e, time.perf_counter() - t0)
+    return {
+        "n_jobs": n_jobs,
+        "round_len": round_len,
+        "round_wall_s": best_r,
+        "round_rounds": len(rr.rounds),
+        "rounds_per_sec": len(rr.rounds) / max(best_r, 1e-9),
+        "event_wall_s": best_e,
+        "event_events": re.n_events,
+        "events_per_sec": re.n_events / max(best_e, 1e-9),
+        "event_sched_calls": inner.calls,
+        "speedup": best_r / max(best_e, 1e-9),
+        "ttd_round_s": rr.total_seconds,
+        "ttd_event_s": re.total_seconds,
+    }
+
+
+def run_steady(n_jobs: int = 48, round_len: float = 60.0):
+    """Steady-state simulation throughput, arrivals flowing: round engine
+    rounds/sec vs event engine events/sec on one sparse Philly trace."""
+    with timed() as t:
+        rows = measure_sparse(n_jobs, round_len)
+    save_json("fig5_steady_state", rows)
+    emit("fig5_steady_state", t.us,
+         f"{n_jobs} jobs sparse: round {rows['rounds_per_sec']:.0f} "
+         f"rounds/s ({rows['round_wall_s']:.2f}s), event "
+         f"{rows['events_per_sec']:.0f} events/s "
+         f"({rows['event_wall_s']:.3f}s), "
+         f"{rows['speedup']:.0f}x wall-clock")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_steady()

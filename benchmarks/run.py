@@ -14,6 +14,7 @@ BENCHES = {
     "fig1": fig1_motivation.run,
     "fig3_4": fig3_4_trace.run,
     "fig5": fig5_scalability.run,
+    "fig5_steady": fig5_scalability.run_steady,
     "fig8_10": fig8_10_cluster.run,
     "fig11_12": fig11_12_slots.run,
     "table4": table4_quality.run,

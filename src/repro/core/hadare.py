@@ -14,12 +14,10 @@ from __future__ import annotations
 
 import copy as _copy
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 from repro.core.hadar import HadarScheduler
-from repro.core.simulator import (RESTART_PENALTY, RoundRecord, SimResult,
-                                  _alloc_equal)
+from repro.core.simulator import RESTART_PENALTY, SimResult
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
 
 MAX_JOB_COUNT = 10000  # paper's max_job_count in the job-ID formula
@@ -139,89 +137,15 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
 
     ``sync_overhead`` charges every allocated copy per round for the
     tracker communication + model aggregation/consolidation (paper §VI-D:
-    this is what makes excessively short slot times unfavorable)."""
-    sched = scheduler or HadarScheduler()
-    tracker = JobTracker(len(cluster.nodes))
-    parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-    for p in parents:
-        p.done_iters = 0.0
-        p.finish_time = None
-        p.alloc = None
-        p.restarts = 0
-    all_copies: List[Job] = []
-    by_id: Dict[int, Job] = {}
-    registered: set = set()
-    rounds: List[RoundRecord] = []
-    t = 0.0
-    n_nodes = len(cluster.nodes)
-    total_gpus = cluster.total_gpus()
+    this is what makes excessively short slot times unfavorable).
 
-    for rnd in range(max_rounds):
-        if all(p.is_done() for p in parents):
-            break
-        for p in parents:
-            if p.arrival <= t and p.job_id not in registered:
-                cs = tracker.register(p, n_copies)
-                all_copies.extend(cs)
-                by_id.update({c.job_id: c for c in cs})
-                registered.add(p.job_id)
-
-        live = [c for c in all_copies if not c.is_done()]
-        t0 = time.perf_counter()
-        desired = sched.schedule(t, round_len, live, cluster)
-        desired = _dedupe_siblings(desired, live, by_id)
-        sched_s = time.perf_counter() - t0
-
-        changed = 0
-        busy_gpu_time = 0.0
-        busy_nodes = set()
-        progress: Dict[int, float] = {}
-        rates: Dict[int, float] = {}
-        for c in live:
-            new = desired.get(c.job_id)
-            penalty = 0.0
-            if not _alloc_equal(c.alloc, new):
-                changed += 1
-                if new is not None and c.alloc is not None:
-                    c.restarts += 1
-                    by_id_parent = tracker.tracked[c.parent].parent
-                    by_id_parent.restarts += 1
-                penalty = restart_penalty if new else 0.0
-            c.alloc = new
-            if not new:
-                continue
-            rate = c.bottleneck_rate(new)
-            w = alloc_size(new)
-            # every allocated copy pays the tracker sync + consolidation
-            # overhead once per round, plus any checkpoint-restart penalty
-            eff = max(0.0, round_len - penalty - sync_overhead)
-            parent = tracker.tracked[c.parent].parent
-            need = parent.remaining_iters  # copies share the parent's pool
-            iters = min(rate * w * eff, need)
-            progress[c.job_id] = iters
-            rates[c.job_id] = rate * w
-            used = penalty + (iters / (rate * w) if rate * w > 0 else 0.0)
-            busy_gpu_time += w * min(used, round_len)
-            busy_nodes.update(alloc_nodes(new))
-
-        finished = tracker.aggregate_round(progress, t, round_len, rates)
-        if finished:
-            sched.note_completion()
-        tracker.split_remaining()
-
-        n_active = sum(1 for p in parents
-                       if not p.is_done() and p.arrival <= t)
-        n_running = len({by_id[cid].parent for cid in progress})
-        rounds.append(RoundRecord(
-            t=t,
-            gru=busy_gpu_time / (total_gpus * round_len),
-            cru=len(busy_nodes) / max(1, n_nodes),
-            running=n_running,
-            waiting=n_active - n_running,
-            changed=changed,
-            sched_seconds=sched_s))
-        t += round_len
-
-    total = max((p.finish_time or t) for p in parents) if parents else 0.0
-    res = SimResult("hadare", rounds, parents, total)
-    return res
+    The implementation is the vectorized, event-aware backend in
+    ``repro.sim.adapters``: aggregation and quota re-splitting are
+    (parent × copy) NumPy array ops instead of the seed's per-copy dict
+    loops, and steady rounds fast-forward to the next event.  Results
+    are identical to the seed loop (``tests/test_hadare_backend.py``)."""
+    from repro.sim.adapters import simulate_hadare as _vectorized
+    return _vectorized(jobs, cluster, round_len=round_len,
+                       max_rounds=max_rounds,
+                       restart_penalty=restart_penalty, n_copies=n_copies,
+                       scheduler=scheduler, sync_overhead=sync_overhead)

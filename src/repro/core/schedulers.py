@@ -172,30 +172,64 @@ class GavelScheduler(Scheduler):
         return Y
 
     def schedule(self, now, round_len, jobs, cluster):
+        """Priority round-robin realization of Y, batched: priorities
+        Y[j,r] / (1 + rounds_received) are ranked in one stable argsort
+        (ties fall back to the seed's (job, type) insertion order), and
+        each gang allocation is one cumulative-sum pass over a live
+        free[node, type] matrix instead of a per-job ``_single_type_alloc``
+        free-pool rebuild.  Decisions are identical to the scalar loop
+        (tests/test_engine_equivalence.py pins this against the vendored
+        reference)."""
         active = [j for j in jobs if not j.is_done() and j.arrival <= now]
         if not active:
             return {}
         types = cluster.gpu_types
         Y = self.allocation_matrix(active, cluster)
-        prio = []
-        for ji, j in enumerate(active):
-            for ri, r in enumerate(types):
-                if Y[ji, ri] <= 0 or j.throughput.get(r, 0) <= 0:
-                    continue
-                recv = self.rounds_received.get((j.job_id, r), 0)
-                prio.append((Y[ji, ri] / (1 + recv), j, r))
-        prio.sort(key=lambda t: -t[0])
-        taken: Dict = {}
+        J, R = Y.shape
+        tcol = {r: ri for ri, r in enumerate(types)}
+        jrow = {j.job_id: ji for ji, j in enumerate(active)}
+        tp = np.array([[j.throughput.get(r, 0.0) for r in types]
+                       for j in active])
+        recv = np.zeros((J, R))
+        for (jid, r), n in self.rounds_received.items():
+            ji = jrow.get(jid)
+            ri = tcol.get(r)
+            if ji is not None and ri is not None:
+                recv[ji, ri] = n
+        vals = np.where((Y > 0) & (tp > 0), Y / (1.0 + recv), -np.inf)
+        order = np.argsort(-vals, axis=None, kind="stable")
+
+        # live free matrix, nodes in cluster order (seed tie-breaking)
+        free = np.array([[n.gpus.get(r, 0) for r in types]
+                         for n in cluster.nodes], dtype=np.int64)
+        node_ids = [n.node_id for n in cluster.nodes]
         out: Dict[int, Alloc] = {}
-        for _, j, r in prio:
+        for fi in order:
+            ji, ri = divmod(int(fi), R)
+            if vals[ji, ri] == -np.inf:
+                break
+            j = active[ji]
             if j.job_id in out:
                 continue
-            alloc = _single_type_alloc(cluster, taken, r, j.n_workers)
-            if alloc:
-                out[j.job_id] = alloc
-                _take(taken, alloc)
-                self.rounds_received[(j.job_id, r)] = \
-                    self.rounds_received.get((j.job_id, r), 0) + 1
+            w = j.n_workers
+            if w <= 0:          # seed's gang allocator never places these
+                continue
+            col = free[:, ri]
+            if int(col.sum()) < w:
+                continue
+            # gang-allocate consolidating on as few nodes as possible:
+            # most-free nodes first, greedy cumulative take
+            nd = np.argsort(-col, kind="stable")
+            csum = np.cumsum(col[nd])
+            k = int(np.searchsorted(csum, w))
+            take = col[nd[:k + 1]].copy()
+            take[k] -= int(csum[k]) - w
+            free[nd[:k + 1], ri] -= take
+            r = types[ri]
+            out[j.job_id] = {(node_ids[int(nd[i])], r): int(take[i])
+                             for i in range(k + 1) if take[i] > 0}
+            self.rounds_received[(j.job_id, r)] = \
+                self.rounds_received.get((j.job_id, r), 0) + 1
         return out
 
 

@@ -1,217 +1,35 @@
-"""Discrete-time trace-driven simulator (paper §IV).
+"""Discrete-time trace-driven simulator (paper §IV) — compatibility shim.
 
-Round-based: every ``round_len`` seconds the scheduler is consulted; jobs
-whose allocation changed pay the paper's 10 s checkpoint-restart penalty;
-progress accrues as x_j(t) * W * effective_seconds (Eq. 1a/1b).  Records
-GRU/CRU per round, completions (TTD/JCT/CDF), restart counts, and
-per-round scheduling latency (Fig. 5).
-
-Event-aware: after a steady round (no completion, no allocation change,
-nobody waiting) under a scheduler whose idle rounds are provable no-ops
-(``stable_when_idle``), the simulator advances straight to the round of
-the next arrival/completion, bulk-applying the intermediate progress and
-replicating the per-round records — long sparse traces cost O(events),
-not O(max_rounds · jobs), with byte-identical SimResult metrics.
+The simulation engines live in :mod:`repro.sim` now: the round-quantized
+loop (this module's historical ``simulate``) moved verbatim to
+``repro.sim.engine.simulate_rounds``; a continuous-time event engine
+(``repro.sim.engine.simulate_events``) drops the round quantization for
+sparse traces.  This module keeps the original public surface —
+``simulate``, ``SimResult``, ``RoundRecord``, ``RESTART_PENALTY`` — so
+existing callers and the vendored test oracles are untouched.
 """
 from __future__ import annotations
 
-import bisect
-import dataclasses
-import math
-import time
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.core.schedulers import Scheduler
-from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
-
-RESTART_PENALTY = 10.0  # seconds per allocation change (paper §IV)
-
-
-@dataclasses.dataclass
-class RoundRecord:
-    t: float
-    gru: float                 # GPU-level utilization this round
-    cru: float                 # node-level utilization this round
-    running: int
-    waiting: int
-    changed: int
-    sched_seconds: float
-
-
-@dataclasses.dataclass
-class SimResult:
-    scheduler: str
-    rounds: List[RoundRecord]
-    jobs: List[Job]
-    total_seconds: float       # TTD
-
-    @property
-    def ttd_hours(self) -> float:
-        return self.total_seconds / 3600.0
-
-    def avg_jct(self) -> float:
-        done = [j.finish_time - j.arrival for j in self.jobs
-                if j.finish_time is not None]
-        return sum(done) / max(1, len(done))
-
-    def max_min_jct(self):
-        done = [j.finish_time - j.arrival for j in self.jobs
-                if j.finish_time is not None]
-        return (max(done), min(done)) if done else (0.0, 0.0)
-
-    def avg_gru(self) -> float:
-        # average over rounds with any demand
-        rs = [r.gru for r in self.rounds if r.running + r.waiting > 0]
-        return sum(rs) / max(1, len(rs))
-
-    def avg_cru(self) -> float:
-        rs = [r.cru for r in self.rounds if r.running + r.waiting > 0]
-        return sum(rs) / max(1, len(rs))
-
-    def completion_cdf(self):
-        ts = sorted(j.finish_time for j in self.jobs
-                    if j.finish_time is not None)
-        return [(t, (i + 1) / len(self.jobs)) for i, t in enumerate(ts)]
-
-    def median_completion(self) -> float:
-        cdf = self.completion_cdf()
-        for t, frac in cdf:
-            if frac >= 0.5:
-                return t
-        return self.total_seconds
-
-    def changed_round_frac(self) -> float:
-        rs = [r for r in self.rounds if r.running > 0]
-        return (sum(1 for r in rs if r.changed > 0) / max(1, len(rs)))
-
-
-def _alloc_equal(a: Optional[Alloc], b: Optional[Alloc]) -> bool:
-    return (a or {}) == (b or {})
+from repro.core.types import Cluster, Job
+from repro.sim.engine import (RESTART_PENALTY, _alloc_equal,  # noqa: F401
+                              simulate_events, simulate_rounds)
+from repro.sim.metrics import (EventSimResult, RoundRecord,  # noqa: F401
+                               SimResult)
 
 
 def simulate(scheduler: Scheduler, jobs: List[Job], cluster: Cluster,
              round_len: float = 360.0, max_rounds: int = 20000,
              restart_penalty: float = RESTART_PENALTY) -> SimResult:
-    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-    for j in jobs:   # reset mutable state
-        j.done_iters = 0.0
-        j.finish_time = None
-        j.attained_service = 0.0
-        j.alloc = None
-        j.restarts = 0
-    total_gpus = cluster.total_gpus()
-    n_nodes = len(cluster.nodes)
-    arrivals = [j.arrival for j in jobs]          # sorted with jobs
-    rounds: List[RoundRecord] = []
-    t = 0.0
-    rnd = 0
-    while rnd < max_rounds:
-        if all(j.is_done() for j in jobs):
-            break
-        t0 = time.perf_counter()
-        desired = scheduler.schedule(t, round_len, jobs, cluster)
-        sched_s = time.perf_counter() - t0
-
-        changed = 0
-        busy_gpu_time = 0.0
-        busy_nodes = set()
-        any_completed = False
-        for j in jobs:
-            new = desired.get(j.job_id)
-            if j.is_done():
-                j.alloc = None
-                continue
-            if not _alloc_equal(j.alloc, new):
-                if j.alloc is not None or new is not None:
-                    changed += 1
-                if new is not None and j.alloc is not None:
-                    j.restarts += 1
-                penalty = restart_penalty if new else 0.0
-            else:
-                penalty = 0.0
-            j.alloc = new
-            if not new:
-                continue
-            rate = j.bottleneck_rate(new)
-            w = alloc_size(new)
-            eff = max(0.0, round_len - penalty)
-            iters_possible = rate * w * eff
-            need = j.remaining_iters
-            if iters_possible >= need and rate * w > 0:
-                used = penalty + need / (rate * w)
-                j.done_iters = j.total_iters
-                j.finish_time = t + used
-                any_completed = True
-                busy_gpu_time += w * used
-                busy_nodes.update(alloc_nodes(new))
-                j.attained_service += w * used
-            else:
-                j.done_iters += iters_possible
-                busy_gpu_time += w * round_len
-                busy_nodes.update(alloc_nodes(new))
-                j.attained_service += w * round_len
-
-        if any_completed and hasattr(scheduler, "note_completion"):
-            scheduler.note_completion()
-
-        n_active = sum(1 for j in jobs
-                       if not j.is_done() and j.arrival <= t)
-        n_running = sum(1 for j in jobs if j.alloc and not j.is_done())
-        rounds.append(RoundRecord(
-            t=t,
-            gru=busy_gpu_time / (total_gpus * round_len),
-            cru=len(busy_nodes) / max(1, n_nodes),
-            running=n_running,
-            waiting=n_active - n_running,
-            changed=changed,
-            sched_seconds=sched_s))
-        t += round_len
-        rnd += 1
-
-        # ---- event-aware fast-forward --------------------------------
-        # A steady round (no completion, no change) under a stable
-        # scheduler with nobody waiting repeats verbatim until the next
-        # arrival or completion; replay it in bulk.
-        if (not getattr(scheduler, "stable_when_idle", False)
-                or any_completed or changed):
-            continue
-        running_jobs = [j for j in jobs if j.alloc and not j.is_done()]
-        n_active_next = sum(1 for j in jobs
-                            if not j.is_done() and j.arrival <= t)
-        if not running_jobs or len(running_jobs) != n_active_next:
-            continue
-        # rounds until the earliest completion (that round runs normally)
-        k_comp = min(
-            math.ceil(j.remaining_iters
-                      / max(j.bottleneck_rate(j.alloc) * alloc_size(j.alloc)
-                            * round_len, 1e-12))
-            for j in running_jobs)
-        # rounds until the next arrival becomes active
-        i_arr = bisect.bisect_right(arrivals, t)
-        k_arr = (math.ceil((arrivals[i_arr] - t) / round_len)
-                 if i_arr < len(arrivals) else k_comp)
-        skip = min(k_comp - 1, k_arr, max_rounds - rnd)
-        # float safety: ceil() can under-count by one ulp; the bulk
-        # progress below must leave every job strictly unfinished, or the
-        # completion round (finish_time, note_completion) would be skipped
-        while skip > 0 and any(
-                j.done_iters + j.bottleneck_rate(j.alloc)
-                * alloc_size(j.alloc) * round_len * skip
-                >= j.total_iters - 1e-9
-                for j in running_jobs):
-            skip -= 1
-        if skip <= 0:
-            continue
-        for j in running_jobs:
-            w = alloc_size(j.alloc)
-            j.done_iters += j.bottleneck_rate(j.alloc) * w * round_len * skip
-            j.attained_service += w * round_len * skip
-        steady = rounds[-1]
-        for i in range(skip):
-            rounds.append(dataclasses.replace(
-                steady, t=t + i * round_len, sched_seconds=0.0))
-        t += skip * round_len
-        rnd += skip
-
-    total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
-    return SimResult(scheduler.name, rounds, jobs, total)
+    """Round-based simulation (engine: ``repro.sim.engine``).  Every
+    ``round_len`` seconds the scheduler is consulted; jobs whose
+    allocation changed pay the checkpoint-restart penalty (per-job
+    ``Job.restart_penalty`` when set, else ``restart_penalty``); progress
+    accrues as x_j(t) * W * effective_seconds (Eq. 1a/1b).  Steady rounds
+    under a ``stable_when_idle`` scheduler fast-forward to the next
+    arrival/completion with byte-identical metrics."""
+    return simulate_rounds(scheduler, jobs, cluster, round_len=round_len,
+                           max_rounds=max_rounds,
+                           restart_penalty=restart_penalty)

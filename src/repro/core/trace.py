@@ -13,6 +13,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.simulator import RESTART_PENALTY
 from repro.core.types import Cluster, Job, Node
 
 # iterations/sec per single device, by (model, gpu type) — relative
@@ -52,9 +53,31 @@ MODEL_SIZE = {"resnet50": "XL", "resnet18": "S", "lstm": "L",
               "cyclegan": "M", "transformer": "L", "recorder": "XL",
               "mima": "M"}
 
+# checkpoint-restart cost by model size: bigger models serialize more
+# state, so preemption costs them more (the paper's flat 10 s — the
+# engine default RESTART_PENALTY — is the M anchor; generators opt in
+# via ``hetero_restarts=True``)
+SIZE_RESTART_PENALTY = {"S": 4.0, "M": RESTART_PENALTY, "L": 22.0,
+                        "XL": 45.0}
+
+
+def restart_penalty_for(size: str) -> float:
+    """Per-job checkpoint-restart penalty derived from model size."""
+    return SIZE_RESTART_PENALTY.get(size, SIZE_RESTART_PENALTY["M"])
+
 
 def restrict(model: str, types: List[str]) -> Dict[str, float]:
     return {r: THROUGHPUT_TABLE[model][r] for r in types}
+
+
+def calibrate_iters(gpu_hours: float,
+                    throughput: Dict[str, float]) -> tuple:
+    """(epochs, iters_per_epoch) such that the job takes ``gpu_hours``
+    on its median device type — shared by the synthetic generator and
+    the CSV replay loader so both calibrate identically."""
+    med = float(np.median(list(throughput.values())))
+    total_iters = max(1.0, gpu_hours * 3600.0 * med)
+    return max(1, int(total_iters // 100)), 100
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +170,8 @@ def motivation_jobs() -> List[Job]:
 def philly_trace(n_jobs: int = 480, seed: int = 0,
                  types: Optional[List[str]] = None,
                  all_at_start: bool = True,
-                 arrival_pattern: Optional[str] = None) -> List[Job]:
+                 arrival_pattern: Optional[str] = None,
+                 hetero_restarts: bool = False) -> List[Job]:
     """Synthetic Microsoft-trace-like workload (§IV-A): size classes
     sampled uniformly, GPU demand heavy-tailed in {1,2,4,8}, models per
     Table II, runtimes drawn from the class's GPU-hour range.
@@ -155,7 +179,10 @@ def philly_trace(n_jobs: int = 480, seed: int = 0,
     ``arrival_pattern`` overlays a non-trivial arrival process (see
     ``bursty_arrivals`` / ``diurnal_arrivals``) on the jobs; the default
     ``None`` keeps the original all-at-start / uniform behaviour (and the
-    exact RNG stream) for reproducibility."""
+    exact RNG stream) for reproducibility.  ``hetero_restarts`` assigns
+    each job a size-derived checkpoint-restart penalty
+    (``restart_penalty_for``); off by default so existing fixed-seed
+    results are untouched."""
     rng = np.random.RandomState(seed)
     types = types or ["v100", "p100", "k80"]
     models = ["resnet50", "resnet18", "lstm", "cyclegan", "transformer"]
@@ -171,13 +198,14 @@ def philly_trace(n_jobs: int = 480, seed: int = 0,
         w = int(rng.choice(w_choices))
         tp = restrict(model, types)
         # calibrate E*N so the job takes ``gpu_hours`` on the median type
-        med = float(np.median(list(tp.values())))
-        total_iters = max(1.0, gpu_hours * 3600.0 * med)
+        epochs, ipe = calibrate_iters(gpu_hours, tp)
         arrival = 0.0 if all_at_start else float(rng.uniform(0, 3600 * 8))
         jobs.append(Job(i, arrival, w,
-                        epochs=max(1, int(total_iters // 100)),
-                        iters_per_epoch=100,
-                        throughput=tp, model=model, size=size))
+                        epochs=epochs,
+                        iters_per_epoch=ipe,
+                        throughput=tp, model=model, size=size,
+                        restart_penalty=(restart_penalty_for(size)
+                                         if hetero_restarts else None)))
     if arrival_pattern is not None:
         gens = {"bursty": bursty_arrivals, "diurnal": diurnal_arrivals}
         arrivals = gens[arrival_pattern](n_jobs, seed=seed + 1)
@@ -235,7 +263,8 @@ MIXES = {
 
 
 def mix_jobs(mix: str, cluster: Cluster, seed: int = 0,
-             base_epochs: int = 30) -> List[Job]:
+             base_epochs: int = 30,
+             hetero_restarts: bool = False) -> List[Job]:
     """Physical-cluster workload mixes: single-GPU jobs (the paper's
     clusters use one GPU per node) with per-model epoch counts scaled so
     mixes finish in a few thousand seconds."""
@@ -245,7 +274,10 @@ def mix_jobs(mix: str, cluster: Cluster, seed: int = 0,
     epochs_by_size = {"S": 20, "M": 30, "L": 40, "XL": 50}
     for i, model in enumerate(MIXES[mix]):
         tp = restrict(model, types)
-        jobs.append(Job(i, 0.0, 1, epochs_by_size[MODEL_SIZE[model]],
+        size = MODEL_SIZE[model]
+        jobs.append(Job(i, 0.0, 1, epochs_by_size[size],
                         iters_per_epoch=60, throughput=tp, model=model,
-                        size=MODEL_SIZE[model]))
+                        size=size,
+                        restart_penalty=(restart_penalty_for(size)
+                                         if hetero_restarts else None)))
     return jobs

@@ -63,6 +63,10 @@ class Job:
     size: str = "M"
     parent: Optional[int] = None     # HadarE fork parent
     single_node: bool = False        # HadarE copies run on one node each
+    # checkpoint-restart cost on allocation change, seconds.  None means
+    # "use the engine default" (10 s, paper §IV); trace generators can
+    # derive a per-job value from model size (big models checkpoint slower)
+    restart_penalty: Optional[float] = None
 
     # --- mutable progress state (simulator-owned) ---
     done_iters: float = 0.0

@@ -1,0 +1,55 @@
+"""repro.sim — discrete-event simulation subsystem.
+
+The event model
+---------------
+Simulated time advances between *scheduling points*; what counts as a
+scheduling point is the only difference between the two engines:
+
+- **round mode** (``engine.simulate_rounds``): scheduling points are the
+  fixed ``round_len`` grid — the paper's §IV round-based model, byte-
+  identical to the seed loop.  Steady rounds under a
+  ``stable_when_idle`` scheduler are fast-forwarded in bulk.
+- **event mode** (``engine.simulate_events``): scheduling points are the
+  events themselves — job arrivals, *predicted completions*, and (for
+  schedulers that rotate allocations every round) a ``round_len``
+  re-schedule quantum.  A completion is predicted whenever an
+  allocation is assigned (``t_fin = t + penalty + remaining / (rate *
+  workers)``) and invalidated lazily by version counter if the
+  allocation changes first; progress accrues analytically over each
+  inter-event interval, so sparse traces cost O(events) with no
+  replicated round records at all.
+
+Module map
+----------
+- ``events``   — ``EventQueue``: heap of ARRIVAL / COMPLETION /
+  RESCHEDULE events with lazy invalidation of stale completion
+  predictions and deduped reschedule quanta.
+- ``engine``   — the two engines above plus the shared restart-penalty
+  / progress-accrual semantics (per-job ``Job.restart_penalty``
+  honored; engine argument is the default).
+- ``metrics``  — ``RoundRecord`` / ``SimResult`` (canonical home;
+  ``repro.core.simulator`` re-exports), the continuous-time
+  ``IntervalRecord`` / ``EventSimResult`` with time-weighted GRU/CRU,
+  and the incremental ``MetricsRecorder``.
+- ``adapters`` — ``CountingScheduler`` instrumentation wrapper, the
+  ``run(mode=...)`` dispatcher, and the vectorized HadarE backend:
+  tracker aggregation / quota re-splitting as (parent × copy) NumPy
+  matrix ops, with steady-round fast-forward.
+- ``replay``   — Philly/Helios-style CSV trace loader/writer mapping
+  real traces onto the same ``Job`` objects the synthetic generators
+  produce.
+"""
+from repro.sim.engine import (RESTART_PENALTY, simulate_events,
+                              simulate_rounds)
+from repro.sim.metrics import (EventSimResult, IntervalRecord, RoundRecord,
+                               SimResult)
+
+__all__ = [
+    "RESTART_PENALTY",
+    "simulate_events",
+    "simulate_rounds",
+    "EventSimResult",
+    "IntervalRecord",
+    "RoundRecord",
+    "SimResult",
+]

@@ -1,0 +1,261 @@
+"""Backends that plug schedulers and HadarE into the simulation engines.
+
+``CountingScheduler`` wraps any ``repro.core.schedulers.Scheduler`` with
+call/latency instrumentation (used by the steady-state benchmarks), and
+``run`` dispatches one workload to either engine by name.
+
+``simulate_hadare`` is the vectorized HadarE backend: the per-copy
+Python dict loops of the seed implementation (progress accounting,
+``JobTracker.aggregate_round``, ``split_remaining``) become NumPy array
+ops over (parent × copy) matrices — ``rw[p, c]`` holds copy c of parent
+p's rate·workers, progress/aggregation/quota-splitting are row
+reductions — while the scheduler consultation and sibling dedupe keep
+the exact seed code path.  On steady rounds (no allocation change, no
+completion, every live copy allocated under a ``stable_when_idle``
+scheduler) it fast-forwards to the next arrival/completion in bulk,
+replicating the per-round records, so long sparse HadarE traces cost
+O(events) like the plain-job engine.  Results are identical to the seed
+loop (``tests/test_hadare_backend.py`` pins this against the vendored
+reference).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.schedulers import Scheduler
+from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
+from repro.sim.engine import (RESTART_PENALTY, _alloc_equal, _job_penalty,
+                              simulate_events, simulate_rounds)
+from repro.sim.metrics import RoundRecord, SimResult
+
+
+class CountingScheduler(Scheduler):
+    """Instrumentation wrapper: counts schedule() consultations and their
+    cumulative wall-clock, delegating everything else to the inner
+    scheduler (including ``stable_when_idle`` / ``note_completion``)."""
+
+    def __init__(self, inner: Scheduler):
+        self.inner = inner
+        self.name = inner.name
+        self.preemptive = inner.preemptive
+        self.stable_when_idle = inner.stable_when_idle
+        self.calls = 0
+        self.total_seconds = 0.0
+
+    def note_completion(self) -> None:
+        if hasattr(self.inner, "note_completion"):
+            self.inner.note_completion()
+
+    def schedule(self, now, round_len, jobs, cluster):
+        t0 = time.perf_counter()
+        out = self.inner.schedule(now, round_len, jobs, cluster)
+        self.total_seconds += time.perf_counter() - t0
+        self.calls += 1
+        return out
+
+
+def run(scheduler: Scheduler, jobs: List[Job], cluster: Cluster,
+        mode: str = "round", **kw) -> SimResult:
+    """Dispatch one workload to an engine: ``round`` (quantized,
+    byte-compatible with the seed) or ``event`` (continuous-time)."""
+    if mode == "round":
+        return simulate_rounds(scheduler, jobs, cluster, **kw)
+    if mode == "event":
+        return simulate_events(scheduler, jobs, cluster, **kw)
+    raise ValueError(f"unknown engine mode: {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# vectorized HadarE backend
+# ---------------------------------------------------------------------------
+
+def simulate_hadare(jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_rounds: int = 20000,
+                    restart_penalty: float = RESTART_PENALTY,
+                    n_copies: Optional[int] = None,
+                    scheduler=None, sync_overhead: float = 5.0,
+                    fast_forward: bool = True) -> SimResult:
+    """Vectorized, event-aware HadarE simulation (see module docstring).
+    ``jobs`` are parents; metrics are reported at parent granularity."""
+    from repro.core.hadar import HadarScheduler
+    from repro.core.hadare import _dedupe_siblings, fork_job
+
+    sched = scheduler or HadarScheduler()
+    parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    for p in parents:
+        p.done_iters = 0.0
+        p.finish_time = None
+        p.alloc = None
+        p.restarts = 0
+    P = len(parents)
+    C = n_copies or len(cluster.nodes)
+    n_nodes = len(cluster.nodes)
+    total_gpus = cluster.total_gpus()
+
+    total = np.array([p.total_iters for p in parents], dtype=float)
+    done = np.zeros(P)
+    registered = np.zeros(P, dtype=bool)
+    arrivals = np.array([p.arrival for p in parents], dtype=float)
+    copy_objs: List[List[Job]] = [[] for _ in range(P)]
+    all_copies: List[Job] = []
+    by_id: Dict[int, Job] = {}
+    pos: Dict[int, tuple] = {}          # copy_id -> (parent_row, copy_col)
+    # per-round (parent × copy) scratch matrices
+    rw = np.zeros((P, C))               # rate * workers per allocated copy
+    pen = np.zeros((P, C))              # checkpoint-restart penalty
+    wmat = np.zeros((P, C))             # workers (devices held)
+    allocated = np.zeros((P, C), dtype=bool)
+
+    rounds: List[RoundRecord] = []
+    t = 0.0
+    rnd = 0
+    while rnd < max_rounds:
+        if bool(np.all(total - done <= 1e-9)):
+            break
+        for i, p in enumerate(parents):
+            if not registered[i] and p.arrival <= t:
+                cs = fork_job(p, C)
+                copy_objs[i] = cs
+                all_copies.extend(cs)
+                for ci, c in enumerate(cs):
+                    by_id[c.job_id] = c
+                    pos[c.job_id] = (i, ci)
+                registered[i] = True
+
+        live = [c for c in all_copies if not c.is_done()]
+        t0 = time.perf_counter()
+        desired = sched.schedule(t, round_len, live, cluster)
+        desired = _dedupe_siblings(desired, live, by_id)
+        sched_s = time.perf_counter() - t0
+
+        changed = 0
+        busy_nodes: set = set()
+        rw[:] = 0.0
+        pen[:] = 0.0
+        wmat[:] = 0.0
+        allocated[:] = False
+        for c in live:
+            pi, ci = pos[c.job_id]
+            new = desired.get(c.job_id)
+            if not _alloc_equal(c.alloc, new):
+                changed += 1
+                if new is not None and c.alloc is not None:
+                    c.restarts += 1
+                    parents[pi].restarts += 1
+                pen[pi, ci] = _job_penalty(c, restart_penalty) if new else 0.0
+            c.alloc = new
+            if not new:
+                continue
+            allocated[pi, ci] = True
+            rw[pi, ci] = c.bottleneck_rate(new) * alloc_size(new)
+            wmat[pi, ci] = alloc_size(new)
+            busy_nodes.update(alloc_nodes(new))
+
+        # --- aggregation and re-split as (parent × copy) array ops -----
+        eff = np.clip(round_len - pen - sync_overhead, 0.0, None)
+        need = total - done                       # shared pool per parent
+        iters = np.where(allocated,
+                         np.minimum(rw * eff, need[:, None]), 0.0)
+        got = iters.sum(axis=1)
+        rate_sum = np.where(allocated, rw, 0.0).sum(axis=1)
+        used = pen + np.where(rw > 0.0, iters / np.where(rw > 0.0, rw, 1.0),
+                              0.0)
+        busy_gpu_time = float(
+            (wmat * np.minimum(used, round_len))[allocated].sum())
+
+        was_live = (total - done) > 1e-9
+        done = np.where(got > 0.0, np.minimum(total, done + got), done)
+        finished = was_live & (got > 0.0) & ((total - done) <= 1e-9)
+        for i in np.nonzero(got > 0.0)[0]:
+            parents[i].done_iters = float(done[i])
+            for c in copy_objs[i]:
+                c.done_iters = float(done[i])
+        for i in np.nonzero(finished)[0]:
+            fin_used = (float(need[i] / rate_sum[i]) if rate_sum[i] > 0.0
+                        else round_len)
+            parents[i].finish_time = t + min(round_len, fin_used)
+            for c in copy_objs[i]:
+                c.alloc = None
+        if bool(finished.any()):
+            sched.note_completion()
+        # next-round step quotas, proportional to node throughput
+        rem = total - done
+        tot_rate = np.where(allocated, rw, 0.0).sum(axis=1)
+        safe_tot = np.where(tot_rate > 0.0, tot_rate, 1.0)
+        quota = np.where(tot_rate[:, None] > 0.0,
+                         rem[:, None] * (rw / safe_tot[:, None]), 0.0)
+        for i in np.nonzero(registered)[0]:
+            for ci, c in enumerate(copy_objs[i]):
+                c.quota = float(quota[i, ci])
+
+        n_active = int((((total - done) > 1e-9) & (arrivals <= t)).sum())
+        n_running = int(allocated.any(axis=1).sum())
+        rounds.append(RoundRecord(
+            t=t,
+            gru=busy_gpu_time / (total_gpus * round_len),
+            cru=len(busy_nodes) / max(1, n_nodes),
+            running=n_running,
+            waiting=n_active - n_running,
+            changed=changed,
+            sched_seconds=sched_s))
+        t += round_len
+        rnd += 1
+
+        # --- steady-round fast-forward --------------------------------
+        # With no change/completion, every live copy allocated, and no
+        # imminent arrival, a stable scheduler repeats the round verbatim
+        # (kept allocations, empty waiting queue); replay it in bulk.
+        if (not fast_forward
+                or not getattr(sched, "stable_when_idle", False)
+                or changed or bool(finished.any())):
+            continue
+        live_rows = (total - done) > 1e-9
+        if not bool(live_rows.any()):
+            continue
+        # every copy of every live parent must hold an allocation: then
+        # the waiting queue is empty and schedule() is a provable no-op
+        if not bool(np.all(allocated[live_rows].all(axis=1))):
+            continue
+        got_rnd = got[live_rows]
+        if not bool(np.all(got_rnd > 0.0)):
+            continue
+        k_comp = int(np.min(np.ceil(
+            (total - done)[live_rows] / got_rnd)))
+        unreg = np.nonzero(~registered)[0]
+        k_arr = (int(np.ceil((arrivals[unreg[0]] - t) / round_len))
+                 if unreg.size else k_comp)
+        skip = min(k_comp - 1, k_arr, max_rounds - rnd)
+        # strictness: bulk progress must leave every parent unfinished,
+        # or the completion round (finish_time, note_completion) and the
+        # per-copy capping it triggers would be skipped
+        while skip > 0 and bool(np.any(
+                done[live_rows] + got_rnd * skip
+                >= total[live_rows] - 1e-9)):
+            skip -= 1
+        if skip <= 0:
+            continue
+        done = np.where(live_rows, done + got * skip, done)
+        for i in np.nonzero(live_rows)[0]:
+            parents[i].done_iters = float(done[i])
+            for c in copy_objs[i]:
+                c.done_iters = float(done[i])
+        # re-split quotas from the post-skip remaining pool
+        rem = total - done
+        quota = np.where(tot_rate[:, None] > 0.0,
+                         rem[:, None] * (rw / safe_tot[:, None]), 0.0)
+        for i in np.nonzero(live_rows)[0]:
+            for ci, c in enumerate(copy_objs[i]):
+                c.quota = float(quota[i, ci])
+        steady = rounds[-1]
+        for i in range(skip):
+            rounds.append(dataclasses.replace(
+                steady, t=t + i * round_len, sched_seconds=0.0))
+        t += skip * round_len
+        rnd += skip
+
+    total_s = max((p.finish_time or t) for p in parents) if parents else 0.0
+    return SimResult("hadare", rounds, parents, total_s)

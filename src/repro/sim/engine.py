@@ -1,0 +1,328 @@
+"""Simulation engines: round-quantized (compatibility) and continuous-time.
+
+``simulate_rounds`` is the round-based engine moved verbatim from
+``repro.core.simulator.simulate`` (which now shims to it): every
+``round_len`` seconds the scheduler is consulted; steady rounds under a
+``stable_when_idle`` scheduler fast-forward to the next
+arrival/completion with byte-identical metrics.
+
+``simulate_events`` drops the round quantization entirely: time advances
+from event to event (arrival / predicted completion / reschedule
+quantum), progress accrues analytically over each inter-event interval,
+and metrics are recorded per interval (``EventSimResult``).  On sparse
+traces — inter-arrival gaps many times ``round_len`` — scheduler
+consultations and records are O(events) with no per-round replication
+at all (per-event work still scans the job list, so the total is
+O(events · jobs)); while active jobs are *waiting*, a ``round_len``
+re-schedule quantum keeps retrying them, exactly the regime where the
+round engine's fast-forward disables itself.
+
+Quantization differences vs the round engine (the documented tolerance
+for equivalence tests):
+
+- the scheduler reacts to arrivals/completions *immediately* instead of
+  at the next round boundary, so each completion can shift earlier by
+  up to ``round_len`` (knock-on effects bounded by the number of
+  scheduling decisions on the job's path);
+- GRU/CRU are time-weighted over intervals rather than averaged per
+  round record;
+- schedulers without ``stable_when_idle`` are re-consulted on a
+  ``round_len`` quantum, so their decision *sequence* matches the round
+  engine's up to the phase shift introduced by event-aligned calls.
+
+Restart penalties are per-job when ``Job.restart_penalty`` is set
+(model-size heterogeneity); the engine-level ``restart_penalty``
+argument remains the default (10 s, paper §IV).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Set
+
+from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
+from repro.sim.events import EventKind, EventQueue
+from repro.sim.metrics import (EventSimResult, MetricsRecorder, RoundRecord,
+                               SimResult)
+
+RESTART_PENALTY = 10.0  # seconds per allocation change (paper §IV)
+
+
+def _alloc_equal(a: Optional[Alloc], b: Optional[Alloc]) -> bool:
+    return (a or {}) == (b or {})
+
+
+def _job_penalty(job: Job, default: float) -> float:
+    return default if job.restart_penalty is None else job.restart_penalty
+
+
+def _reset_jobs(jobs: List[Job]) -> None:
+    for j in jobs:
+        j.done_iters = 0.0
+        j.finish_time = None
+        j.attained_service = 0.0
+        j.alloc = None
+        j.restarts = 0
+
+
+# ---------------------------------------------------------------------------
+# round-quantized engine (compatibility mode)
+# ---------------------------------------------------------------------------
+
+def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_rounds: int = 20000,
+                    restart_penalty: float = RESTART_PENALTY) -> SimResult:
+    """Round-based simulation; byte-identical to the seed round loop on
+    dense traces, O(events) on sparse ones via steady fast-forward."""
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    _reset_jobs(jobs)
+    total_gpus = cluster.total_gpus()
+    n_nodes = len(cluster.nodes)
+    arrivals = [j.arrival for j in jobs]          # sorted with jobs
+    rounds: List[RoundRecord] = []
+    t = 0.0
+    rnd = 0
+    while rnd < max_rounds:
+        if all(j.is_done() for j in jobs):
+            break
+        t0 = time.perf_counter()
+        desired = scheduler.schedule(t, round_len, jobs, cluster)
+        sched_s = time.perf_counter() - t0
+
+        changed = 0
+        busy_gpu_time = 0.0
+        busy_nodes: Set[int] = set()
+        any_completed = False
+        for j in jobs:
+            new = desired.get(j.job_id)
+            if j.is_done():
+                j.alloc = None
+                continue
+            if not _alloc_equal(j.alloc, new):
+                if j.alloc is not None or new is not None:
+                    changed += 1
+                if new is not None and j.alloc is not None:
+                    j.restarts += 1
+                penalty = _job_penalty(j, restart_penalty) if new else 0.0
+            else:
+                penalty = 0.0
+            j.alloc = new
+            if not new:
+                continue
+            rate = j.bottleneck_rate(new)
+            w = alloc_size(new)
+            eff = max(0.0, round_len - penalty)
+            iters_possible = rate * w * eff
+            need = j.remaining_iters
+            if iters_possible >= need and rate * w > 0:
+                used = penalty + need / (rate * w)
+                j.done_iters = j.total_iters
+                j.finish_time = t + used
+                any_completed = True
+                busy_gpu_time += w * used
+                busy_nodes.update(alloc_nodes(new))
+                j.attained_service += w * used
+            else:
+                j.done_iters += iters_possible
+                busy_gpu_time += w * round_len
+                busy_nodes.update(alloc_nodes(new))
+                j.attained_service += w * round_len
+
+        if any_completed and hasattr(scheduler, "note_completion"):
+            scheduler.note_completion()
+
+        n_active = sum(1 for j in jobs
+                       if not j.is_done() and j.arrival <= t)
+        n_running = sum(1 for j in jobs if j.alloc and not j.is_done())
+        rounds.append(RoundRecord(
+            t=t,
+            gru=busy_gpu_time / (total_gpus * round_len),
+            cru=len(busy_nodes) / max(1, n_nodes),
+            running=n_running,
+            waiting=n_active - n_running,
+            changed=changed,
+            sched_seconds=sched_s))
+        t += round_len
+        rnd += 1
+
+        # ---- event-aware fast-forward --------------------------------
+        # A steady round (no completion, no change) under a stable
+        # scheduler with nobody waiting repeats verbatim until the next
+        # arrival or completion; replay it in bulk.
+        if (not getattr(scheduler, "stable_when_idle", False)
+                or any_completed or changed):
+            continue
+        running_jobs = [j for j in jobs if j.alloc and not j.is_done()]
+        n_active_next = sum(1 for j in jobs
+                            if not j.is_done() and j.arrival <= t)
+        if not running_jobs or len(running_jobs) != n_active_next:
+            continue
+        # rounds until the earliest completion (that round runs normally)
+        k_comp = min(
+            math.ceil(j.remaining_iters
+                      / max(j.bottleneck_rate(j.alloc) * alloc_size(j.alloc)
+                            * round_len, 1e-12))
+            for j in running_jobs)
+        # rounds until the next arrival becomes active
+        i_arr = bisect.bisect_right(arrivals, t)
+        k_arr = (math.ceil((arrivals[i_arr] - t) / round_len)
+                 if i_arr < len(arrivals) else k_comp)
+        skip = min(k_comp - 1, k_arr, max_rounds - rnd)
+        # float safety: ceil() can under-count by one ulp; the bulk
+        # progress below must leave every job strictly unfinished, or the
+        # completion round (finish_time, note_completion) would be skipped
+        while skip > 0 and any(
+                j.done_iters + j.bottleneck_rate(j.alloc)
+                * alloc_size(j.alloc) * round_len * skip
+                >= j.total_iters - 1e-9
+                for j in running_jobs):
+            skip -= 1
+        if skip <= 0:
+            continue
+        for j in running_jobs:
+            w = alloc_size(j.alloc)
+            j.done_iters += j.bottleneck_rate(j.alloc) * w * round_len * skip
+            j.attained_service += w * round_len * skip
+        steady = rounds[-1]
+        for i in range(skip):
+            rounds.append(dataclasses.replace(
+                steady, t=t + i * round_len, sched_seconds=0.0))
+        t += skip * round_len
+        rnd += skip
+
+    total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
+    return SimResult(scheduler.name, rounds, jobs, total)
+
+
+# ---------------------------------------------------------------------------
+# continuous-time engine
+# ---------------------------------------------------------------------------
+
+def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_events: int = 500000,
+                    restart_penalty: float = RESTART_PENALTY
+                    ) -> EventSimResult:
+    """Continuous-time simulation: t jumps to the next event.
+
+    ``round_len`` keeps two roles: the scheduling quantum for schedulers
+    without ``stable_when_idle`` (they are re-consulted every
+    ``round_len`` while jobs are active), and the value passed to
+    ``scheduler.schedule`` so scheduler-side heuristics see the same
+    horizon as in round mode.
+    """
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    _reset_jobs(jobs)
+    by_id = {j.job_id: j for j in jobs}
+    stable = getattr(scheduler, "stable_when_idle", False)
+    q = EventQueue()
+    for j in jobs:
+        q.push_arrival(j.arrival, j.job_id)
+    recorder = MetricsRecorder(cluster.total_gpus(), len(cluster.nodes))
+    pen_until: Dict[int, float] = {j.job_id: 0.0 for j in jobs}
+    t = 0.0
+    n_events = 0
+    sched_calls = 0
+    # changes/latency applied at the *start* of the open interval; attached
+    # to the interval record when it closes at the next event
+    open_changed = 0
+    open_sched_s = 0.0
+
+    def _accrue_and_record(t0: float, t1: float) -> None:
+        dt = t1 - t0
+        if dt <= 0.0:
+            return
+        busy_gpu_time = 0.0
+        busy_nodes: Set[int] = set()
+        running = 0
+        for j in jobs:
+            if not j.alloc or j.is_done():
+                continue
+            running += 1
+            w = alloc_size(j.alloc)
+            busy_gpu_time += w * dt
+            busy_nodes.update(alloc_nodes(j.alloc))
+            j.attained_service += w * dt
+            eff = t1 - max(t0, pen_until[j.job_id])
+            if eff > 0.0:
+                rate = j.bottleneck_rate(j.alloc)
+                # float-safety cap: stay strictly above the is_done()
+                # threshold (1e-9) until the completion event fires
+                j.done_iters = min(j.total_iters - 1e-8,
+                                   j.done_iters + rate * w * eff)
+        n_active = sum(1 for j in jobs
+                       if not j.is_done() and j.arrival <= t0)
+        recorder.close_interval(t0, dt, busy_gpu_time, busy_nodes,
+                                running, n_active - running,
+                                open_changed, open_sched_s)
+
+    while q and n_events < max_events:
+        batch = q.pop_batch()
+        if not batch:
+            break
+        t_new = batch[0].time
+        _accrue_and_record(t, t_new)
+        t = t_new
+        open_changed = 0
+        open_sched_s = 0.0
+
+        any_completed = False
+        for ev in batch:
+            n_events += 1
+            if ev.kind == EventKind.COMPLETION:
+                j = by_id[ev.job_id]
+                if j.is_done() and j.finish_time is not None:
+                    continue
+                j.done_iters = j.total_iters
+                j.finish_time = t
+                j.alloc = None
+                any_completed = True
+        if any_completed and hasattr(scheduler, "note_completion"):
+            scheduler.note_completion()
+        if all(j.is_done() for j in jobs):
+            break
+
+        t0 = time.perf_counter()
+        desired = scheduler.schedule(t, round_len, jobs, cluster)
+        open_sched_s = time.perf_counter() - t0
+        sched_calls += 1
+
+        for j in jobs:
+            if j.is_done():
+                j.alloc = None
+                continue
+            if j.arrival > t:
+                continue
+            new = desired.get(j.job_id)
+            if _alloc_equal(j.alloc, new):
+                continue        # outstanding completion prediction stays valid
+            if j.alloc is not None or new is not None:
+                open_changed += 1
+            if new is not None and j.alloc is not None:
+                j.restarts += 1
+            q.invalidate_completion(j.job_id)
+            j.alloc = new
+            if not new:
+                pen_until[j.job_id] = t
+                continue
+            pen = _job_penalty(j, restart_penalty)
+            pen_until[j.job_id] = t + pen
+            rate = j.bottleneck_rate(new)
+            w = alloc_size(new)
+            if rate * w > 0:
+                t_fin = t + pen + j.remaining_iters / (rate * w)
+                q.push_completion(t_fin, j.job_id)
+
+        # re-schedule quantum: always for rotating schedulers; for stable
+        # ones only while some active job is still unallocated (the same
+        # condition that disables the round engine's fast-forward), so
+        # waiting jobs are retried each round instead of silently
+        # starving when no completion/arrival is pending
+        if any(not j.is_done() and j.arrival <= t
+               and (not stable or j.alloc is None) for j in jobs):
+            q.push_reschedule(t + round_len)
+
+    total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
+    return recorder.result(scheduler.name, jobs, total, n_events,
+                           sched_calls)

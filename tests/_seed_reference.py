@@ -239,8 +239,79 @@ class ReferenceHadarScheduler:
 
 
 # ---------------------------------------------------------------------------
-# seed schedulers.py (Gavel water-filling)
+# seed schedulers.py (Gavel water-filling + scalar priority realization)
 # ---------------------------------------------------------------------------
+
+def _free_pool(cluster: Cluster, taken: Dict) -> Dict[Tuple[int, str], int]:
+    free = {}
+    for n in cluster.nodes:
+        for r, c in n.gpus.items():
+            free[(n.node_id, r)] = c - taken.get((n.node_id, r), 0)
+    return free
+
+
+def _take(taken: Dict, alloc: Alloc) -> None:
+    for k, v in alloc.items():
+        taken[k] = taken.get(k, 0) + v
+
+
+def _single_type_alloc(cluster: Cluster, taken: Dict, gpu_type: str,
+                       count: int) -> Optional[Alloc]:
+    free = _free_pool(cluster, taken)
+    if sum(c for (h, r), c in free.items() if r == gpu_type) < count:
+        return None
+    nodes = sorted(cluster.nodes,
+                   key=lambda n: -(free.get((n.node_id, gpu_type), 0)))
+    alloc: Alloc = {}
+    need = count
+    for n in nodes:
+        c = min(need, free.get((n.node_id, gpu_type), 0))
+        if c > 0:
+            alloc[(n.node_id, gpu_type)] = c
+            need -= c
+        if need == 0:
+            return alloc
+    return None
+
+
+class ReferenceGavelScheduler:
+    """Seed Gavel: scalar water-filling matrix + scalar per-job priority
+    round-robin realization (the pre-batching ``schedule`` loop)."""
+
+    name = "gavel"
+    preemptive = True
+    stable_when_idle = False
+
+    def __init__(self):
+        self.rounds_received: Dict[Tuple[int, str], int] = {}
+
+    def schedule(self, now, round_len, jobs, cluster):
+        active = [j for j in jobs if not j.is_done() and j.arrival <= now]
+        if not active:
+            return {}
+        types = cluster.gpu_types
+        Y = allocation_matrix(active, cluster)
+        prio = []
+        for ji, j in enumerate(active):
+            for ri, r in enumerate(types):
+                if Y[ji, ri] <= 0 or j.throughput.get(r, 0) <= 0:
+                    continue
+                recv = self.rounds_received.get((j.job_id, r), 0)
+                prio.append((Y[ji, ri] / (1 + recv), j, r))
+        prio.sort(key=lambda t: -t[0])
+        taken: Dict = {}
+        out: Dict[int, Alloc] = {}
+        for _, j, r in prio:
+            if j.job_id in out:
+                continue
+            alloc = _single_type_alloc(cluster, taken, r, j.n_workers)
+            if alloc:
+                out[j.job_id] = alloc
+                _take(taken, alloc)
+                self.rounds_received[(j.job_id, r)] = \
+                    self.rounds_received.get((j.job_id, r), 0) + 1
+        return out
+
 
 def allocation_matrix(jobs: List[Job], cluster: Cluster,
                       iters: int = 40, step: float = 0.05) -> np.ndarray:
@@ -316,7 +387,11 @@ def simulate(scheduler, jobs: List[Job], cluster: Cluster,
                     changed += 1
                 if new is not None and j.alloc is not None:
                     j.restarts += 1
-                penalty = restart_penalty if new else 0.0
+                # per-job checkpoint cost when set (seed behaviour for
+                # restart_penalty=None jobs is untouched)
+                pen_j = (restart_penalty if j.restart_penalty is None
+                         else j.restart_penalty)
+                penalty = pen_j if new else 0.0
             else:
                 penalty = 0.0
             j.alloc = new
@@ -359,3 +434,104 @@ def simulate(scheduler, jobs: List[Job], cluster: Cluster,
 
     total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
     return SimResult(scheduler.name, rounds, jobs, total)
+
+
+# ---------------------------------------------------------------------------
+# seed hadare.py (per-copy dict-loop round simulation; no fast-forward)
+# ---------------------------------------------------------------------------
+
+def simulate_hadare(jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_rounds: int = 20000,
+                    restart_penalty: float = RESTART_PENALTY,
+                    n_copies: Optional[int] = None,
+                    scheduler=None, sync_overhead: float = 5.0) -> SimResult:
+    """Verbatim seed HadarE loop (JobTracker dict aggregation, every
+    round simulated) — oracle for the vectorized backend, extended only
+    with the per-job restart_penalty rule shared by both engines."""
+    from repro.core.hadar import HadarScheduler
+    from repro.core.hadare import JobTracker, _dedupe_siblings
+
+    sched = scheduler or HadarScheduler()
+    tracker = JobTracker(len(cluster.nodes))
+    parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    for p in parents:
+        p.done_iters = 0.0
+        p.finish_time = None
+        p.alloc = None
+        p.restarts = 0
+    all_copies: List[Job] = []
+    by_id: Dict[int, Job] = {}
+    registered: set = set()
+    rounds: List[RoundRecord] = []
+    t = 0.0
+    n_nodes = len(cluster.nodes)
+    total_gpus = cluster.total_gpus()
+
+    for rnd in range(max_rounds):
+        if all(p.is_done() for p in parents):
+            break
+        for p in parents:
+            if p.arrival <= t and p.job_id not in registered:
+                cs = tracker.register(p, n_copies)
+                all_copies.extend(cs)
+                by_id.update({c.job_id: c for c in cs})
+                registered.add(p.job_id)
+
+        live = [c for c in all_copies if not c.is_done()]
+        t0 = time.perf_counter()
+        desired = sched.schedule(t, round_len, live, cluster)
+        desired = _dedupe_siblings(desired, live, by_id)
+        sched_s = time.perf_counter() - t0
+
+        changed = 0
+        busy_gpu_time = 0.0
+        busy_nodes = set()
+        progress: Dict[int, float] = {}
+        rates: Dict[int, float] = {}
+        for c in live:
+            new = desired.get(c.job_id)
+            penalty = 0.0
+            if not _alloc_equal(c.alloc, new):
+                changed += 1
+                if new is not None and c.alloc is not None:
+                    c.restarts += 1
+                    by_id_parent = tracker.tracked[c.parent].parent
+                    by_id_parent.restarts += 1
+                pen_c = (restart_penalty if c.restart_penalty is None
+                         else c.restart_penalty)
+                penalty = pen_c if new else 0.0
+            c.alloc = new
+            if not new:
+                continue
+            rate = c.bottleneck_rate(new)
+            w = alloc_size(new)
+            eff = max(0.0, round_len - penalty - sync_overhead)
+            parent = tracker.tracked[c.parent].parent
+            need = parent.remaining_iters
+            iters = min(rate * w * eff, need)
+            progress[c.job_id] = iters
+            rates[c.job_id] = rate * w
+            used = penalty + (iters / (rate * w) if rate * w > 0 else 0.0)
+            busy_gpu_time += w * min(used, round_len)
+            busy_nodes.update(alloc_nodes(new))
+
+        finished = tracker.aggregate_round(progress, t, round_len, rates)
+        if finished:
+            sched.note_completion()
+        tracker.split_remaining()
+
+        n_active = sum(1 for p in parents
+                       if not p.is_done() and p.arrival <= t)
+        n_running = len({by_id[cid].parent for cid in progress})
+        rounds.append(RoundRecord(
+            t=t,
+            gru=busy_gpu_time / (total_gpus * round_len),
+            cru=len(busy_nodes) / max(1, n_nodes),
+            running=n_running,
+            waiting=n_active - n_running,
+            changed=changed,
+            sched_seconds=sched_s))
+        t += round_len
+
+    total = max((p.finish_time or t) for p in parents) if parents else 0.0
+    return SimResult("hadare", rounds, parents, total)

@@ -109,6 +109,60 @@ def test_gavel_matrix_and_schedule_match_reference(seed, n):
     assert o1 == o2
 
 
+@pytest.mark.parametrize("seed,n", [(0, 10), (3, 40), (7, 120)])
+def test_gavel_realization_matches_scalar_reference(seed, n):
+    """The batched priority round-robin realization (one stable argsort
+    + cumulative-sum gang allocation on a live free matrix) returns the
+    seed scalar loop's allocations — including rounds_received state —
+    across consecutive rounds on simple and multi-pod clusters."""
+    for cluster in (simulation_cluster(), multi_cluster(seed=seed)):
+        jobs_a = philly_trace(n_jobs=n, seed=seed, types=cluster.gpu_types)
+        jobs_b = philly_trace(n_jobs=n, seed=seed, types=cluster.gpu_types)
+        g_new, g_ref = GavelScheduler(), ref.ReferenceGavelScheduler()
+        for rnd in range(5):
+            o1 = g_new.schedule(rnd * 360.0, 360.0, jobs_a, cluster)
+            o2 = g_ref.schedule(rnd * 360.0, 360.0, jobs_b, cluster)
+            assert o1 == o2, (seed, n, rnd)
+            assert g_new.rounds_received == g_ref.rounds_received
+
+
+@pytest.mark.filterwarnings("ignore:divide by zero:RuntimeWarning")
+def test_gavel_realization_skips_zero_worker_jobs_like_reference():
+    """n_workers=0 jobs (Philly CPU-only rows) must neither receive a
+    phantom empty alloc nor advance rounds_received — the scalar
+    reference's falsy-alloc guard skips them.  (The water-filling sweep
+    itself divides by w on both sides — identical seed semantics.)"""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=6, seed=1)
+    jobs[2].n_workers = 0
+    g_new, g_ref = GavelScheduler(), ref.ReferenceGavelScheduler()
+    for rnd in range(3):
+        o1 = g_new.schedule(rnd * 360.0, 360.0, jobs, cluster)
+        o2 = g_ref.schedule(rnd * 360.0, 360.0, jobs, cluster)
+        assert o1 == o2
+        assert jobs[2].job_id not in o1
+        assert g_new.rounds_received == g_ref.rounds_received
+
+
+def test_gavel_full_simulation_matches_scalar_reference():
+    """End to end: the realization difference is invisible to SimResult
+    metrics over a whole simulated trace."""
+    r1 = ref.simulate(ref.ReferenceGavelScheduler(),
+                      philly_trace(n_jobs=16, seed=11),
+                      simulation_cluster(), round_len=360.0,
+                      max_rounds=8000)
+    r2 = ref.simulate(GavelScheduler(), philly_trace(n_jobs=16, seed=11),
+                      simulation_cluster(), round_len=360.0,
+                      max_rounds=8000)
+    assert len(r1.rounds) == len(r2.rounds)
+    for a, b in zip(r1.jobs, r2.jobs):
+        assert (a.finish_time is None) == (b.finish_time is None)
+        if a.finish_time is not None:
+            assert abs(a.finish_time - b.finish_time) < 1e-9
+        assert a.restarts == b.restarts
+    assert abs(r1.avg_gru() - r2.avg_gru()) < 1e-12
+
+
 @pytest.mark.parametrize("seed,n,now", [(1, 24, 0.0), (5, 80, 0.0),
                                         (2, 40, 7200.0)])
 def test_hadar_round_matches_reference(seed, n, now):

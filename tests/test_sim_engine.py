@@ -1,0 +1,202 @@
+"""repro.sim: event queue semantics, continuous-time engine vs the round
+oracle (documented quantization tolerance), sparse-trace O(events)
+behaviour, and per-job restart-penalty heterogeneity."""
+import numpy as np
+import pytest
+
+import _seed_reference as ref
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import (GavelScheduler, TiresiasScheduler,
+                                   YarnCSScheduler)
+from repro.core.trace import (philly_trace, restart_penalty_for,
+                              simulation_cluster)
+from repro.sim.adapters import CountingScheduler, run
+from repro.sim.engine import simulate_events, simulate_rounds
+from repro.sim.events import EventKind, EventQueue
+from repro.sim.metrics import EventSimResult, IntervalRecord
+
+ALL = [HadarScheduler, GavelScheduler, TiresiasScheduler, YarnCSScheduler]
+
+
+# ---------------------------------------------------------------------------
+# event queue
+# ---------------------------------------------------------------------------
+
+def test_event_queue_orders_and_batches():
+    q = EventQueue()
+    q.push_completion(5.0, 1)
+    q.push_arrival(5.0, 2)
+    q.push_arrival(3.0, 3)
+    q.push_reschedule(5.0)
+    assert q.peek_time() == 3.0
+    b1 = q.pop_batch()
+    assert [e.kind for e in b1] == [EventKind.ARRIVAL]
+    # same-time ties: ARRIVAL < COMPLETION < RESCHEDULE
+    b2 = q.pop_batch()
+    assert [e.kind for e in b2] == [EventKind.ARRIVAL, EventKind.COMPLETION,
+                                    EventKind.RESCHEDULE]
+    assert not q
+
+
+def test_event_queue_lazy_completion_invalidation():
+    q = EventQueue()
+    q.push_completion(10.0, 7)
+    q.invalidate_completion(7)          # reallocation dropped the prediction
+    q.push_completion(12.0, 7)
+    batch = q.pop_batch()
+    assert [(e.time, e.job_id) for e in batch] == [(12.0, 7)]
+    assert not q
+
+
+def test_event_queue_reschedule_dedupe_keeps_earliest():
+    q = EventQueue()
+    q.push_reschedule(100.0)
+    q.push_reschedule(50.0)             # earlier wins
+    q.push_reschedule(200.0)            # later is a no-op
+    assert q.peek_time() == 50.0
+    assert len(q.pop_batch()) == 1
+    assert not q.pop_batch()            # stale 100.0 / 200.0 discarded
+
+
+# ---------------------------------------------------------------------------
+# continuous engine vs round oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched_cls", ALL)
+def test_event_engine_matches_round_oracle_within_tolerance(sched_cls):
+    """Quantization tolerance (see repro.sim.engine docstring): the event
+    engine reacts to arrivals/completions immediately instead of at the
+    next round boundary, so metrics may shift by O(round_len) per
+    decision — but must track the round oracle closely."""
+    cluster = simulation_cluster()
+    L = 360.0
+    rr = simulate_rounds(sched_cls(), philly_trace(n_jobs=12, seed=3),
+                         cluster, round_len=L, max_rounds=8000)
+    re = simulate_events(sched_cls(), philly_trace(n_jobs=12, seed=3),
+                         cluster, round_len=L)
+    assert isinstance(re, EventSimResult)
+    assert all(j.finish_time is not None for j in re.jobs)
+    assert all(j.done_iters >= j.total_iters - 1e-6 for j in re.jobs)
+    assert abs(re.total_seconds - rr.total_seconds) \
+        <= max(2 * L, 0.02 * rr.total_seconds)
+    assert abs(re.avg_jct() - rr.avg_jct()) \
+        <= max(3 * L, 0.05 * rr.avg_jct())
+    assert abs(re.avg_gru() - rr.avg_gru()) <= 0.05
+    assert abs(re.avg_cru() - rr.avg_cru()) <= 0.05
+    for r in re.rounds:
+        assert isinstance(r, IntervalRecord)
+        assert r.dt > 0 and r.waiting >= 0
+        assert 0.0 <= r.gru <= 1.0 + 1e-9
+        assert 0.0 <= r.cru <= 1.0 + 1e-9
+
+
+def test_event_engine_nonpreemptive_is_exact():
+    """With YARN-CS and an uncontended all-at-start trace the decision
+    sequence is identical in both engines, so completion times are
+    exact, not just within tolerance."""
+    cluster = simulation_cluster()
+    rr = simulate_rounds(YarnCSScheduler(), philly_trace(n_jobs=12, seed=3),
+                         cluster, round_len=360.0, max_rounds=8000)
+    re = simulate_events(YarnCSScheduler(), philly_trace(n_jobs=12, seed=3),
+                         cluster, round_len=360.0)
+    for a, b in zip(rr.jobs, re.jobs):
+        assert a.job_id == b.job_id
+        assert abs(a.finish_time - b.finish_time) < 1e-6
+
+
+def _sparse_jobs(n=24, seed=5, stretch=40.0):
+    jobs = philly_trace(n_jobs=n, seed=seed, all_at_start=False)
+    for j in jobs:
+        j.arrival *= stretch            # gaps many times round_len
+    return jobs
+
+
+def test_event_engine_is_o_events_on_sparse_trace():
+    """The tentpole claim: on a sparse trace the event engine touches
+    O(events) state — a handful of interval records and scheduler calls
+    — where the round path materializes tens of thousands of rounds."""
+    cluster = simulation_cluster()
+    L = 60.0
+    inner = CountingScheduler(HadarScheduler())
+    rr = run(HadarScheduler(), _sparse_jobs(), cluster, mode="round",
+             round_len=L, max_rounds=200000)
+    re = run(inner, _sparse_jobs(), cluster, mode="event", round_len=L)
+    n = len(re.jobs)
+    assert all(j.finish_time is not None for j in re.jobs)
+    assert re.n_events <= 2 * n + 2              # arrivals + completions
+    assert inner.calls <= 2 * n + 2
+    assert len(re.rounds) <= 2 * n + 2
+    assert len(rr.rounds) > 50 * len(re.rounds)  # round path is O(rounds)
+    assert abs(re.total_seconds - rr.total_seconds) <= 2 * L
+    assert abs(re.avg_jct() - rr.avg_jct()) \
+        <= max(3 * L, 0.05 * rr.avg_jct())
+
+
+def test_run_dispatcher_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        run(HadarScheduler(), [], simulation_cluster(), mode="warp")
+
+
+# ---------------------------------------------------------------------------
+# preemption-cost heterogeneity
+# ---------------------------------------------------------------------------
+
+def test_round_engine_honors_per_job_restart_penalty_exactly():
+    """Per-job penalties flow through the engine identically to the
+    vendored oracle (which applies the same per-job rule)."""
+    cluster = simulation_cluster()
+    mk = lambda: philly_trace(n_jobs=10, seed=4, hetero_restarts=True)
+    assert any(j.restart_penalty not in (None, 10.0) for j in mk())
+    r1 = ref.simulate(GavelScheduler(), mk(), cluster, round_len=360.0,
+                      max_rounds=6000)
+    r2 = simulate_rounds(GavelScheduler(), mk(), cluster, round_len=360.0,
+                         max_rounds=6000)
+    for a, b in zip(r1.jobs, r2.jobs):
+        assert (a.finish_time is None) == (b.finish_time is None)
+        if a.finish_time is not None:
+            assert abs(a.finish_time - b.finish_time) < 1e-6
+    assert abs(r1.avg_gru() - r2.avg_gru()) < 1e-9
+    assert len(r1.rounds) == len(r2.rounds)
+
+
+def test_hetero_restart_penalties_slow_preempted_workloads():
+    """Raising every job's checkpoint cost can only hurt a preemption-
+    heavy schedule (Gavel rotates allocations every round)."""
+    cluster = simulation_cluster()
+    base = philly_trace(n_jobs=8, seed=9)
+    slow = philly_trace(n_jobs=8, seed=9)
+    for j in slow:
+        j.restart_penalty = 120.0
+    r_base = simulate_rounds(GavelScheduler(), base, cluster,
+                             round_len=360.0, max_rounds=6000)
+    r_slow = simulate_rounds(GavelScheduler(), slow, cluster,
+                             round_len=360.0, max_rounds=6000)
+    assert r_base.total_seconds <= r_slow.total_seconds + 1e-6
+
+
+def test_size_derived_penalties_cover_size_classes():
+    assert restart_penalty_for("S") < restart_penalty_for("M") == 10.0
+    assert restart_penalty_for("M") < restart_penalty_for("L") \
+        < restart_penalty_for("XL")
+    assert restart_penalty_for("??") == 10.0    # unknown size: default
+    jobs = philly_trace(n_jobs=40, seed=0, hetero_restarts=True)
+    assert {j.restart_penalty for j in jobs} \
+        == {restart_penalty_for(s) for s in {j.size for j in jobs}}
+    # default trace generation stays penalty-neutral (engine default)
+    assert all(j.restart_penalty is None
+               for j in philly_trace(n_jobs=10, seed=0))
+
+
+def test_event_engine_charges_restart_penalty():
+    """A penalized job completes later than the same job with a zero
+    penalty by at least the penalty it paid on first placement."""
+    from repro.core.types import Cluster, Job, Node
+    cluster = Cluster([Node(0, {"v100": 1})])
+    mk = lambda pen: [Job(0, 0.0, 1, 10, 10, {"v100": 1.0},
+                          restart_penalty=pen)]
+    r0 = simulate_events(YarnCSScheduler(), mk(0.0), cluster,
+                         round_len=60.0)
+    r9 = simulate_events(YarnCSScheduler(), mk(9.0), cluster,
+                         round_len=60.0)
+    assert abs((r9.jobs[0].finish_time - r0.jobs[0].finish_time) - 9.0) \
+        < 1e-9

@@ -1,0 +1,157 @@
+"""repro.sim.replay: CSV trace loader/writer — lossless round-trip,
+Philly-style alias/duration handling, and end-to-end replay through both
+engines on the shipped example trace."""
+import os
+
+import pytest
+
+from repro.core.hadar import HadarScheduler
+from repro.core.trace import (THROUGHPUT_TABLE, philly_trace,
+                              restart_penalty_for)
+from repro.sim.engine import simulate_events, simulate_rounds
+from repro.sim.replay import load_trace_csv, save_trace_csv
+
+EXAMPLE = os.path.join(os.path.dirname(__file__), "..", "examples",
+                       "traces", "philly_mini.csv")
+
+
+def test_round_trip_is_lossless(tmp_path):
+    jobs = philly_trace(n_jobs=25, seed=6, all_at_start=False,
+                        hetero_restarts=True)
+    path = tmp_path / "trace.csv"
+    save_trace_csv(jobs, str(path))
+    back = load_trace_csv(str(path))
+    assert len(back) == len(jobs)
+    for a, b in zip(jobs, back):
+        assert (a.job_id, a.n_workers, a.epochs, a.iters_per_epoch) \
+            == (b.job_id, b.n_workers, b.epochs, b.iters_per_epoch)
+        assert a.arrival == b.arrival                 # repr() round-trip
+        assert a.throughput == b.throughput
+        assert a.model == b.model and a.size == b.size
+        assert a.restart_penalty == b.restart_penalty
+
+
+def test_round_trip_preserves_simulation(tmp_path):
+    """Replayed jobs produce the identical schedule: same finish times
+    under the same scheduler as the in-memory originals."""
+    from repro.core.trace import simulation_cluster
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=10, seed=2)
+    path = tmp_path / "trace.csv"
+    save_trace_csv(jobs, str(path))
+    r1 = simulate_rounds(HadarScheduler(), philly_trace(n_jobs=10, seed=2),
+                         cluster, round_len=360.0, max_rounds=6000)
+    r2 = simulate_rounds(HadarScheduler(), load_trace_csv(str(path)),
+                         cluster, round_len=360.0, max_rounds=6000)
+    for a, b in zip(r1.jobs, r2.jobs):
+        assert a.job_id == b.job_id
+        assert abs(a.finish_time - b.finish_time) < 1e-9
+    assert len(r1.rounds) == len(r2.rounds)
+
+
+def test_example_trace_loads_with_aliases():
+    jobs = load_trace_csv(EXAMPLE, types=["v100", "p100", "k80"])
+    assert len(jobs) == 12
+    by_id = {j.job_id: j for j in jobs}
+    # Philly-style columns: jobid / submit_time / num_gpus / duration_hours
+    assert by_id[104].n_workers == 4 and by_id[104].arrival == 5400.0
+    # model-table throughputs restricted to the requested types
+    assert set(by_id[101].throughput) == {"v100", "p100", "k80"}
+    assert by_id[101].throughput["v100"] \
+        == THROUGHPUT_TABLE["resnet18"]["v100"]
+    # explicit tp_* columns override the table (a3c row)
+    assert by_id[111].throughput == {"v100": 2.0, "p100": 1.6, "k80": 1.0}
+    assert by_id[111].epochs == 20 and by_id[111].iters_per_epoch == 100
+    # restart_penalty column: set where present, engine default elsewhere
+    assert by_id[102].restart_penalty == 22.0
+    assert by_id[101].restart_penalty is None
+    # duration_hours calibrated on the median type: ~duration at median
+    j = by_id[103]
+    med = sorted(j.throughput.values())[1]
+    assert j.total_iters == pytest.approx(1.5 * 3600.0 * med, rel=0.01)
+
+
+def test_example_trace_hetero_restarts_derivation():
+    jobs = load_trace_csv(EXAMPLE, hetero_restarts=True)
+    by_id = {j.job_id: j for j in jobs}
+    assert by_id[102].restart_penalty == 22.0       # explicit kept
+    assert by_id[101].restart_penalty == restart_penalty_for("S")
+    assert by_id[108].restart_penalty == restart_penalty_for("XL")
+
+
+def test_example_trace_replays_through_both_engines():
+    from repro.core.trace import simulation_cluster
+    cluster = simulation_cluster()
+    L = 360.0
+    rr = simulate_rounds(HadarScheduler(), load_trace_csv(EXAMPLE),
+                         cluster, round_len=L, max_rounds=20000)
+    re = simulate_events(HadarScheduler(), load_trace_csv(EXAMPLE),
+                         cluster, round_len=L)
+    assert all(j.finish_time is not None for j in rr.jobs)
+    assert all(j.finish_time is not None for j in re.jobs)
+    assert abs(re.total_seconds - rr.total_seconds) \
+        <= max(2 * L, 0.02 * rr.total_seconds)
+    assert abs(re.avg_jct() - rr.avg_jct()) \
+        <= max(3 * L, 0.05 * rr.avg_jct())
+
+
+def test_loader_handles_philly_ids_and_datetimes(tmp_path):
+    """Published Philly rows: string application ids and ISO datetime
+    submit times.  Ids remap to row indices; datetimes rebase to t=0."""
+    p = tmp_path / "philly.csv"
+    p.write_text(
+        "jobid,submit_time,num_gpus,model,duration_hours\n"
+        "application_1506638472019_10258,2017-10-03 14:08:23,1,"
+        "resnet18,0.5\n"
+        "application_1506638472019_10259,2017-10-03 15:08:23,2,lstm,1.0\n")
+    jobs = load_trace_csv(str(p))
+    assert [j.job_id for j in jobs] == [0, 1]
+    assert jobs[0].arrival == 0.0
+    assert jobs[1].arrival == 3600.0
+    p2 = tmp_path / "dup.csv"
+    p2.write_text("job_id,arrival,n_workers,model,duration_hours\n"
+                  "7,0,1,resnet18,0.5\n7,10,1,lstm,1.0\n")
+    with pytest.raises(ValueError, match="duplicate job_id"):
+        load_trace_csv(str(p2))
+
+
+def test_loader_skips_cpu_only_rows_and_matches_generator_calibration(
+        tmp_path):
+    """Philly num_gpus=0 rows are dropped, and duration calibration is
+    the shared helper the synthetic generator uses."""
+    from repro.core.trace import calibrate_iters, restrict
+    p = tmp_path / "cpu.csv"
+    p.write_text("job_id,arrival,num_gpus,model,duration_hours\n"
+                 "1,0,0,resnet18,0.5\n"
+                 "2,0,2,lstm,1.5\n")
+    jobs = load_trace_csv(str(p))
+    assert [j.job_id for j in jobs] == [2]
+    e, ipe = calibrate_iters(1.5, restrict("lstm",
+                                           list(jobs[0].throughput)))
+    assert (jobs[0].epochs, jobs[0].iters_per_epoch) == (e, ipe)
+
+
+def test_loader_rejects_unresolvable_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("job_id,arrival,n_workers,model,duration_hours\n"
+                 "1,0,1,nosuchmodel,2.0\n")
+    with pytest.raises(ValueError, match="throughput table"):
+        load_trace_csv(str(p))
+    p2 = tmp_path / "bad2.csv"
+    p2.write_text("job_id,arrival,n_workers,model\n1,0,1,resnet18\n")
+    with pytest.raises(ValueError, match="duration"):
+        load_trace_csv(str(p2))
+
+
+def test_loader_requires_throughput_coverage_of_requested_types(tmp_path):
+    """Type-blind schedulers may hand a job any cluster type; a job
+    rating only a subset would KeyError (or never run) mid-simulation —
+    reject it at load time instead."""
+    p = tmp_path / "partial.csv"
+    p.write_text("job_id,arrival,n_workers,duration_hours,tp_v100\n"
+                 "1,0,1,0.5,3.0\n")
+    with pytest.raises(ValueError, match="every.*requested type"):
+        load_trace_csv(str(p), types=["v100", "p100"])
+    # full coverage loads fine
+    jobs = load_trace_csv(str(p), types=["v100"])
+    assert jobs[0].throughput == {"v100": 3.0}
