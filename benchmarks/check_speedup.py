@@ -1,7 +1,8 @@
 """Perf smoke gate: fail if the vectorized engine's per-round scheduling
 latency at n=256 regresses more than 2x against the recorded baseline,
-or if the event engine loses its sparse-trace advantage over the
-round-based path.
+if the event engine loses its sparse-trace advantage over the
+round-based path, or if the jit-batched price solver loses its edge
+over the per-job NumPy scan.
 
 Usage:
   python benchmarks/check_speedup.py            # gate against baselines
@@ -20,10 +21,21 @@ To stay machine-independent, the gates compare *normalized* numbers:
   gate enforces the absolute acceptance bar — event wall-clock at most
   1/5 of the round path — plus a 2x regression margin on the recorded
   ratio.
+- the jit gate (baseline_fig5_jit.json) prices the whole n=1024 fig5
+  queue through ``find_alloc_batch`` (one fused call, post-compile) and
+  through the per-job NumPy greedy scan in the same process: the batched
+  solver must be >= 3x faster (acceptance bar) and must not regress more
+  than 2x against the recorded speedup ratio — both are ratios of
+  same-process wall-clocks, so slower CI hardware cancels out.  The
+  gate also re-checks decision equality job by job.  When jax is not
+  importable the jit gate is skipped with a notice (the committed
+  baseline documents the container result).
 
 ``--quick`` runs a seconds-scale smoke over a tiny trace: both engines
 and the HadarE backend must complete every job and agree within the
-documented quantization tolerance.  No baselines are touched.
+documented quantization tolerance, and (when jax is importable) the
+batched solver must match the per-job path on small shapes.  No
+baselines are touched.
 """
 import argparse
 import json
@@ -39,12 +51,16 @@ BASELINE = os.path.join(os.path.dirname(__file__),
                         "baseline_fig5_n256.json")
 EVENT_BASELINE = os.path.join(os.path.dirname(__file__),
                               "baseline_event_sparse.json")
+JIT_BASELINE = os.path.join(os.path.dirname(__file__),
+                            "baseline_fig5_jit.json")
 N_JOBS = 256
 REPEATS = 3
 MAX_REGRESSION = 2.0
 EVENT_MAX_FRACTION = 0.2        # event engine must stay <= 1/5 round path
 SPARSE_N_JOBS = 32
 SPARSE_ROUND_LEN = 60.0
+JIT_N_JOBS = 1024
+JIT_MIN_SPEEDUP = 3.0           # batched solver vs per-job NumPy scan
 
 
 def _best_round(mk_sched, jobs_factory, cluster) -> float:
@@ -84,6 +100,52 @@ def measure_event(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN):
                                  "event_wall_s")}
 
 
+def measure_jit(n_jobs=JIT_N_JOBS, repeats=REPEATS):
+    """Whole-queue pricing scan at ``n_jobs``: one fused batched call vs
+    the per-job NumPy loop, same state, same process.  Returns wall
+    clocks, the speedup ratio, and the count of decision mismatches
+    (must be 0 — the backends are bit-identical by contract)."""
+    from benchmarks.fig5_scalability import grown_cluster
+    from repro.core.batch_solver import find_alloc_batch
+    from repro.core.dp import _find_alloc_arrays
+    from repro.core.pricing import PriceState
+    from repro.core.trace import philly_trace
+    from repro.core.utility import effective_throughput
+
+    cluster = grown_cluster(n_jobs)
+    jobs = philly_trace(n_jobs=n_jobs, seed=1, types=cluster.gpu_types)
+    ps = PriceState(cluster, jobs, 7 * 24 * 3600.0, effective_throughput,
+                    0.0)
+    avail = ps.free_arr.copy()
+    gamma = ps.gamma_arr.copy()
+
+    best_np = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ref_c = [_find_alloc_arrays(j, avail, gamma, ps, 0.0,
+                                    effective_throughput, False)
+                 for j in jobs]
+        best_np = min(best_np, time.perf_counter() - t0)
+
+    jit_c = find_alloc_batch(jobs, avail, gamma, ps, 0.0,
+                             effective_throughput)    # compile warmup
+    best_jit = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jit_c = find_alloc_batch(jobs, avail, gamma, ps, 0.0,
+                                 effective_throughput)
+        best_jit = min(best_jit, time.perf_counter() - t0)
+
+    mismatches = sum(
+        1 for a, b in zip(ref_c, jit_c)
+        if (a is None) != (b is None)
+        or (a is not None and (a.alloc != b.alloc or a.cost != b.cost
+                               or a.payoff != b.payoff)))
+    return {"n_jobs": n_jobs, "numpy_s": best_np, "jit_s": best_jit,
+            "speedup": best_np / max(best_jit, 1e-9),
+            "mismatches": mismatches}
+
+
 def quick_smoke() -> None:
     """Tiny-trace smoke: engines + HadarE backend complete and agree."""
     from repro.core.hadar import HadarScheduler
@@ -106,10 +168,21 @@ def quick_smoke() -> None:
     tb = testbed_cluster()
     rh = simulate_hadare(mix_jobs("M-3", tb), tb, round_len=90.0)
     assert all(p.finish_time is not None for p in rh.jobs), "hadare"
+
+    # jit smoke: compile on small shapes, decisions must match the
+    # per-job path exactly (seconds on CPU; skipped without jax)
+    from repro.core.batch_solver import HAS_JAX
+    jit_msg = "jit skipped (no jax)"
+    if HAS_JAX:
+        jit = measure_jit(n_jobs=32, repeats=1)
+        assert jit["mismatches"] == 0, \
+            f"jit smoke: {jit['mismatches']} decision mismatches"
+        jit_msg = f"jit n=32 match ({jit['jit_s']*1e3:.0f}ms/call)"
+
     print(f"quick smoke passed: round TTD {rr.total_seconds:.0f}s, "
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
-          f"hadare TTD {rh.total_seconds:.0f}s")
+          f"hadare TTD {rh.total_seconds:.0f}s, {jit_msg}")
 
 
 def main():
@@ -129,14 +202,20 @@ def main():
         print(f"no baseline at {BASELINE}; run with --record first")
         raise SystemExit(2)
 
+    from repro.core.batch_solver import HAS_JAX
+
     current = measure()
     event = measure_event()
+    jit = measure_jit() if HAS_JAX else None
     if args.record:
         with open(BASELINE, "w") as f:
             json.dump({"n_jobs": N_JOBS, **current}, f, indent=1)
         with open(EVENT_BASELINE, "w") as f:
             json.dump(event, f, indent=1)
-        print(f"recorded baselines: {current} | {event}")
+        if jit is not None:
+            with open(JIT_BASELINE, "w") as f:
+                json.dump(jit, f, indent=1)
+        print(f"recorded baselines: {current} | {event} | {jit}")
         return
 
     failed = False
@@ -178,6 +257,38 @@ def main():
     else:
         print(f"no event baseline at {EVENT_BASELINE}; "
               f"run with --record to add one")
+
+    # ---- jit-batched solver gate ----------------------------------------
+    if jit is None:
+        print("jit gate skipped: jax unavailable on this host "
+              f"(committed baseline at {JIT_BASELINE} documents the "
+              f"container result)")
+    else:
+        print(f"jit solver: batched {jit['jit_s']:.3f}s vs per-job numpy "
+              f"{jit['numpy_s']:.3f}s at n={jit['n_jobs']} "
+              f"({jit['speedup']:.1f}x, {jit['mismatches']} mismatches)")
+        if jit["mismatches"]:
+            print("FAIL: jit solver decisions diverged from the NumPy "
+                  "path")
+            failed = True
+        if jit["speedup"] < JIT_MIN_SPEEDUP:
+            print(f"FAIL: jit solver speedup {jit['speedup']:.2f}x below "
+                  f"the {JIT_MIN_SPEEDUP}x acceptance bar")
+            failed = True
+        if os.path.exists(JIT_BASELINE):
+            with open(JIT_BASELINE) as f:
+                jbase = json.load(f)
+            jratio = jbase["speedup"] / max(jit["speedup"], 1e-9)
+            print(f"jit speedup {jit['speedup']:.1f}x vs baseline "
+                  f"{jbase['speedup']:.1f}x — regression ratio "
+                  f"{jratio:.2f}x (margin {MAX_REGRESSION}x)")
+            if jratio > MAX_REGRESSION:
+                print(f"FAIL: jit solver advantage regressed "
+                      f">{MAX_REGRESSION}x vs baseline")
+                failed = True
+        else:
+            print(f"no jit baseline at {JIT_BASELINE}; "
+                  f"run with --record to add one")
 
     if failed:
         raise SystemExit(1)

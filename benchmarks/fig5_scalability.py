@@ -11,8 +11,22 @@ for consolidated packing.
 ``run_steady`` measures sustained simulation throughput with arrivals
 flowing (not just one scheduling decision): the round engine's
 rounds/sec and the event engine's events/sec on the same sparse trace,
-plus the wall-clock ratio between the two paths."""
+plus the wall-clock ratio between the two paths.  With ``--steady
+--n-jobs N1 N2 ...`` it sweeps multi-thousand-job Philly-style replays
+and publishes the rounds/sec + events/sec curves *per pricing-solver
+backend* (numpy vs the jit-batched kernel) to one JSON artifact
+(``experiments/bench/fig5_steady_state.json``).  Large sweep points cap
+the engines (``cap_rounds``/``cap_events``) so each point measures
+sustained throughput in bounded wall-clock; capped rows are flagged."""
+import argparse
+import os
+import sys
 import time
+
+if __package__ in (None, ""):   # direct script usage
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
 
 from benchmarks.common import emit, save_json, timed
 from repro.core.hadar import HadarScheduler
@@ -86,35 +100,46 @@ def sparse_trace(n_jobs: int, round_len: float, seed: int = 5,
     return jobs
 
 
-def measure_sparse(n_jobs: int, round_len: float, repeats: int = 1):
+def measure_sparse(n_jobs: int, round_len: float, repeats: int = 1,
+                   solver: str = None, cap_rounds: int = None,
+                   cap_events: int = None):
     """Shared round-vs-event timing harness on one sparse trace (also
     drives the check_speedup.py perf gate — keep the regimes in sync by
     construction).  Wall-clocks are best-of-``repeats``; counts and TTDs
-    come from the (deterministic) last run."""
+    come from the (deterministic) last run.  ``solver`` picks the Hadar
+    pricing backend; ``cap_rounds``/``cap_events`` bound the engines for
+    multi-thousand-job sweep points (throughput = work/wall either
+    way)."""
     cluster = grown_cluster(n_jobs)
+    max_rounds = cap_rounds if cap_rounds is not None else 2000000
+    max_events = cap_events if cap_events is not None else 500000
+    mk_sched = lambda: HadarScheduler(solver=solver or "auto")
     best_r = best_e = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        rr = simulate_rounds(HadarScheduler(), sparse_trace(n_jobs,
-                                                            round_len),
+        rr = simulate_rounds(mk_sched(), sparse_trace(n_jobs, round_len),
                              cluster, round_len=round_len,
-                             max_rounds=2000000)
+                             max_rounds=max_rounds, solver=solver)
         best_r = min(best_r, time.perf_counter() - t0)
 
-        inner = CountingScheduler(HadarScheduler())
+        inner = CountingScheduler(mk_sched())
         t0 = time.perf_counter()
         re = simulate_events(inner, sparse_trace(n_jobs, round_len),
-                             cluster, round_len=round_len)
+                             cluster, round_len=round_len,
+                             max_events=max_events, solver=solver)
         best_e = min(best_e, time.perf_counter() - t0)
     return {
         "n_jobs": n_jobs,
         "round_len": round_len,
+        "solver": solver or "auto",
         "round_wall_s": best_r,
         "round_rounds": len(rr.rounds),
         "rounds_per_sec": len(rr.rounds) / max(best_r, 1e-9),
+        "round_capped": cap_rounds is not None,
         "event_wall_s": best_e,
         "event_events": re.n_events,
         "events_per_sec": re.n_events / max(best_e, 1e-9),
+        "event_capped": cap_events is not None,
         "event_sched_calls": inner.calls,
         "speedup": best_r / max(best_e, 1e-9),
         "ttd_round_s": rr.total_seconds,
@@ -122,21 +147,68 @@ def measure_sparse(n_jobs: int, round_len: float, repeats: int = 1):
     }
 
 
-def run_steady(n_jobs: int = 48, round_len: float = 60.0):
+# sweep points above this get bounded engines so each point costs
+# bounded wall-clock; rates stay comparable (throughput = work / wall)
+_CAP_ABOVE = 256
+_CAP_ROUNDS = 4000
+_CAP_EVENTS = 6000
+
+
+def run_steady(n_jobs: int = 48, round_len: float = 60.0, sweep=None,
+               solvers=None):
     """Steady-state simulation throughput, arrivals flowing: round engine
-    rounds/sec vs event engine events/sec on one sparse Philly trace."""
-    with timed() as t:
-        rows = measure_sparse(n_jobs, round_len)
-    save_json("fig5_steady_state", rows)
-    emit("fig5_steady_state", t.us,
-         f"{n_jobs} jobs sparse: round {rows['rounds_per_sec']:.0f} "
-         f"rounds/s ({rows['round_wall_s']:.2f}s), event "
-         f"{rows['events_per_sec']:.0f} events/s "
-         f"({rows['event_wall_s']:.3f}s), "
-         f"{rows['speedup']:.0f}x wall-clock")
-    return rows
+    rounds/sec vs event engine events/sec on sparse Philly traces.
+
+    ``sweep`` (list of job counts) scales the replay to multi-thousand-job
+    Philly-style workloads; curves are measured per pricing-solver
+    backend in ``solvers`` and published to one JSON artifact."""
+    from repro.core.batch_solver import HAS_JAX
+    if solvers is None:
+        solvers = ["numpy"] + (["jax"] if HAS_JAX else [])
+    sizes = list(sweep) if sweep else [n_jobs]
+    out = {"round_len": round_len, "sizes": sizes, "curves": {}}
+    sweep_us = {}
+    for sv in solvers:
+        curve = {}
+        with timed() as t:
+            for n in sizes:
+                capped = n > _CAP_ABOVE
+                curve[n] = measure_sparse(
+                    n, round_len, solver=sv,
+                    cap_rounds=_CAP_ROUNDS if capped else None,
+                    cap_events=_CAP_EVENTS if capped else None)
+        out["curves"][sv] = curve
+        sweep_us[sv] = t.us
+    save_json("fig5_steady_state", out)
+    top = max(sizes)
+    for sv in solvers:
+        rows = out["curves"][sv][top]
+        emit("fig5_steady_state", sweep_us[sv],
+             f"[{sv}] {top} jobs sparse: round "
+             f"{rows['rounds_per_sec']:.0f} rounds/s "
+             f"({rows['round_wall_s']:.2f}s), event "
+             f"{rows['events_per_sec']:.0f} events/s "
+             f"({rows['event_wall_s']:.3f}s), "
+             f"{rows['speedup']:.0f}x wall-clock")
+    return out
 
 
 if __name__ == "__main__":
-    run()
-    run_steady()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steady", action="store_true",
+                    help="run only the steady-state throughput benchmark")
+    ap.add_argument("--n-jobs", type=int, nargs="+", default=None,
+                    help="steady-state sweep sizes (e.g. 256 1024 2048)")
+    ap.add_argument("--round-len", type=float, default=60.0)
+    ap.add_argument("--solvers", nargs="+", default=None,
+                    choices=["numpy", "jax", "auto"],
+                    help="pricing backends to compare (default: numpy "
+                         "+ jax when available)")
+    args = ap.parse_args()
+    if args.steady:
+        run_steady(round_len=args.round_len, sweep=args.n_jobs,
+                   solvers=args.solvers)
+    else:
+        run()
+        run_steady(round_len=args.round_len, sweep=args.n_jobs,
+                   solvers=args.solvers)

@@ -1,0 +1,427 @@
+"""JIT-batched dual price solver: FIND_ALLOC for the whole queue in one
+fused ``jax.jit``/``vmap`` call (Algorithm 2, lines 22-27, batched).
+
+The per-job NumPy kernel in :mod:`repro.core.dp` prices one job per call;
+this module evaluates the standalone candidates of *every* queued job
+against one shared cluster state in a single device dispatch.  Shapes are
+static — the job axis is padded to a power-of-two bucket so the number of
+recompiles is bounded by ``log2(max queue)`` per cluster geometry.
+
+Tensor axes (names used throughout), mapped to Algorithm 2:
+
+==========  =============================================================
+axis        meaning
+==========  =============================================================
+``B``       padded job bucket (queue axis; line 13's loop over the queue)
+``M``       cluster *keys* — one per (node, gpu_type) pair, in
+            ``PriceState.keys`` order (the ``h``/``r`` double loop)
+``N``       node rows (line 24's "each server h")
+``R``       global GPU types; per job, column ``k`` is the rank in the
+            job's throughput-descending preference order (line 23's sort;
+            ``rank == R`` marks a type the job cannot use)
+``C``       marginal units per key, unit ``i`` = the (i+1)-th extra
+            device (Eq. 5's gamma+i exponent)
+==========  =============================================================
+
+Per-job inputs are gathered on the key axis via ``rank[B, M]`` (each
+job's preference rank of key m's type).  The kernel computes, batched:
+
+- consolidated candidates (line 24): per-key availability scattered into
+  (node, rank) layout, prefix sums over the rank axis, packed take
+  counts, and packing costs gathered from the *host-computed* cumulative
+  unit-price table ``cumP`` (Eq. 5 prefix sums);
+- spread candidates (lines 25-27): price/throughput ratios over the full
+  (key, unit) pool, one stable argsort per job, per-prefix eligibility
+  masks, costs, slowest-used-rank, and server counts (the communication
+  penalty's ``n_servers - 1`` term).
+
+Decision fidelity: the unit-price matrix ``P``, its prefix sums, and the
+utility table ``u_tab`` (line 28's U_j) are computed on the host with the
+exact same NumPy/scalar operations as the per-job path — XLA's ``pow``
+is not bit-identical to NumPy's — so every float the sort and the
+feasibility logic consume is bitwise equal.  Candidate *selection*
+replays the reference enumeration order (per preference prefix:
+consolidated nodes in node order, then the prefix's spread candidate;
+first maximum wins), and each winner's cost/payoff is re-derived on the
+host with the reference summation order, so emitted ``Candidate``s are
+bit-identical to ``repro.core.dp._find_alloc_arrays`` — enforced against
+``tests/_seed_reference.py`` by the engine-equivalence suite.
+
+One residual caveat: the spread-candidate cost that feeds winner
+*selection* is an XLA reduction whose accumulation order can differ from
+NumPy's by last-ulp amounts (likewise the consolidated cost's sequential
+rank-axis accumulation matches ``np.sum`` only while the type count
+stays below NumPy's 8-element pairwise-summation threshold — true of
+every cluster here), so a selection flip is conceivable when two
+*different* allocations tie to within one ulp under the reference —
+structurally symmetric ties are safe (both backends compute both sides
+identically, enumeration order resolves them the same way), and the
+equivalence suites observe zero mismatches; winners' emitted fields are
+always host-exact regardless.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.utility import effective_throughput
+
+try:  # the container bakes in jax; degrade to the NumPy path without it
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    HAS_JAX = True
+except Exception:  # pragma: no cover - exercised only on jax-less hosts
+    jax = None
+    jnp = None
+    enable_x64 = None
+    HAS_JAX = False
+
+# queue sizes below this stay on the per-job NumPy path under
+# solver="auto" (kernel dispatch overhead dominates tiny batches);
+# solver="jax" forces the batched path at any size.
+AUTO_MIN_JOBS = 16
+_BUCKET_MIN = 8
+
+_KERNELS: Dict = {}
+
+
+def to_device(arr: np.ndarray):
+    """Upload a host array as a float64/int64 JAX buffer (x64 semantics,
+    scoped — the rest of the repo keeps jax's default float32)."""
+    with enable_x64():
+        return jnp.asarray(arr)
+
+
+def resolve_solver(solver: Optional[str]) -> str:
+    """Map a ``solver`` flag (None/'auto'/'jax'/'numpy') to the backend
+    that will run: auto-detect prefers jax when importable."""
+    mode = solver or "auto"
+    if mode == "auto":
+        return "jax" if HAS_JAX else "numpy"
+    if mode not in ("jax", "numpy"):
+        raise ValueError(f"unknown solver {solver!r} "
+                         "(expected 'jax', 'numpy', or 'auto')")
+    if mode == "jax" and not HAS_JAX:
+        raise RuntimeError("solver='jax' requested but jax is unavailable")
+    return mode
+
+
+def use_batch(solver: Optional[str], n_jobs: int) -> bool:
+    """Should this call take the batched device path?  Purely a
+    performance dispatch — both paths return bit-identical decisions."""
+    mode = solver or "auto"
+    if mode == "auto":
+        return HAS_JAX and n_jobs >= AUTO_MIN_JOBS
+    return resolve_solver(mode) == "jax" and n_jobs > 0
+
+
+def bucket_size(n_jobs: int) -> int:
+    """Pad the job axis to the next power of two (>= 8) so recompiles per
+    cluster geometry are bounded by log2 of the largest queue."""
+    b = _BUCKET_MIN
+    while b < n_jobs:
+        b *= 2
+    return b
+
+
+def _build_kernel(N: int, R: int, comm_frac: float):
+    """The fused per-(cluster-geometry) kernel: vmap over the job bucket,
+    jitted once per (B, M, C) shape triple.
+
+    The pool's stable argsort arrives pre-computed from the host (NumPy's
+    batched mergesort is both faster than XLA's CPU sort and bitwise the
+    reference operation); everything downstream — feasibility prefixes,
+    packed take counts and costs, per-prefix spread eligibility, costs,
+    server counts — is fused here.  Scatters are avoided: (node, rank)
+    aggregation is a static one-hot contraction (exact — each output cell
+    has at most one contributing key), and the chosen spread units are
+    re-derived in the original (key, unit) layout from the W-th eligible
+    element's (ratio, flat-index) threshold, which is elementwise."""
+
+    def per_job(avail, P, cumP, node1h, node_row, W, Kj, rank,
+                u_tab, single_node, s_rank, s_valid, s_price, s_ratio,
+                s_flat, ratio_o):
+        M, C = P.shape
+        L = M * C
+        Wf = W
+        Wi = W.astype(jnp.int32)
+        usable = rank < Kj
+        rank1h = (rank[:, None] == jnp.arange(R + 1)[None, :]).astype(
+            P.dtype)
+
+        # ---- consolidated (line 24): keys into (node, rank) layout -----
+        # (node, rank) cells have at most one contributing key per job, so
+        # the one-hot contraction is an exact scatter, in matmul form
+        av_use = jnp.where(usable, avail, 0.0)
+        A = jnp.einsum("nm,mr->nr", node1h.T,
+                       rank1h * av_use[:, None])[:, :R]
+        Apos = jnp.maximum(A, 0.0)
+        # unrolled prefix sums over the (small, static) rank axis keep the
+        # accumulation order identical to NumPy's sequential cumsum
+        raw_cols, pos_cols = [], []
+        rc = jnp.zeros((N,), P.dtype)
+        pc = jnp.zeros((N,), P.dtype)
+        for k in range(R):
+            rc = rc + A[:, k]
+            pc = pc + Apos[:, k]
+            raw_cols.append(rc)
+            pos_cols.append(pc)
+        rawcum = jnp.stack(raw_cols, axis=1)
+        poscum = jnp.stack(pos_cols, axis=1)
+        feas_any = rawcum >= Wf
+        feasible = feas_any.any(axis=1)
+        k_first = jnp.argmax(feas_any, axis=1)
+        take = jnp.clip(Wf - (poscum - Apos), 0.0, Apos)
+        j_last = jnp.argmax(poscum >= Wf, axis=1)
+
+        take_pad = jnp.concatenate([take, jnp.zeros((N, 1), P.dtype)],
+                                   axis=1)
+        t_key = take_pad[node_row, rank].astype(jnp.int32)
+        v = jnp.where(usable,
+                      jnp.take_along_axis(cumP, t_key[:, None],
+                                          axis=1)[:, 0],
+                      0.0)
+        vs = jnp.einsum("nm,mr->nr", node1h.T, rank1h * v[:, None])
+        packed_cost = vs[:, 0]
+        for k in range(1, R):
+            packed_cost = packed_cost + vs[:, k]
+        packed_payoff = u_tab[j_last] - packed_cost
+
+        # ---- spread (lines 25-27): prefix masks over the sorted pool ---
+        i_idx = jnp.arange(C)
+        valid = usable[:, None] & (i_idx[None, :] < avail[:, None])
+        flat_grid = jnp.arange(L).reshape(M, C)
+        lidx = jnp.arange(L)
+
+        ok_l, pay_l, jmax_l, nserv_l, counts_l = [], [], [], [], []
+        for k in range(1, R + 1):
+            elig = s_valid & (s_rank < k)
+            csum = jnp.cumsum(elig.astype(jnp.int32))
+            n_elig = csum[-1]
+            chosen = elig & (csum <= Wi)
+            cost2 = jnp.sum(jnp.where(chosen, s_price, 0.0))
+            jmax = jnp.max(jnp.where(chosen, s_rank, -1))
+            # chosen units, back in (key, unit) layout: everything at or
+            # below the last chosen element's (ratio, flat) sort key
+            p_last = jnp.maximum(jnp.max(jnp.where(chosen, lidx, -1)), 0)
+            tau = s_ratio[p_last]
+            fstar = s_flat[p_last]
+            elig_o = valid & (rank < k)[:, None]
+            chosen_o = elig_o & ((ratio_o < tau)
+                                 | ((ratio_o == tau)
+                                    & (flat_grid <= fstar)))
+            cnt = jnp.sum(chosen_o, axis=1, dtype=jnp.int32)
+            node_cnt = jnp.einsum("m,mn->n", cnt.astype(P.dtype), node1h)
+            nserv = jnp.sum((node_cnt > 0).astype(jnp.int32))
+            u_jmax = u_tab[jnp.maximum(jmax, 0)]
+            cost2 = cost2 + jnp.where(
+                nserv > 1,
+                comm_frac * jnp.maximum(u_jmax, 0.0) * (nserv - 1),
+                0.0)
+            ok_l.append((n_elig >= Wi) & jnp.logical_not(single_node)
+                        & (k <= Kj))
+            pay_l.append(u_jmax - cost2)
+            jmax_l.append(jmax)
+            nserv_l.append(nserv)
+            counts_l.append(cnt)
+
+        return (feasible, k_first, j_last, take, packed_cost,
+                packed_payoff,
+                jnp.stack(ok_l), jnp.stack(pay_l), jnp.stack(jmax_l),
+                jnp.stack(nserv_l), jnp.stack(counts_l))
+
+    return jax.jit(jax.vmap(
+        per_job, in_axes=(None, None, None, None, None, 0, 0, 0, 0, 0,
+                          0, 0, 0, 0, 0, 0)))
+
+
+def _get_kernel(N: int, R: int, comm_frac: float):
+    key = (N, R, comm_frac)
+    if key not in _KERNELS:
+        _KERNELS[key] = _build_kernel(N, R, comm_frac)
+    return _KERNELS[key]
+
+
+def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
+                     ps, now: float, utility, force: bool = False,
+                     avail_dev=None) -> List:
+    """Standalone FIND_ALLOC candidates for every job in ``jobs`` against
+    one shared cluster state — the batched equivalent of calling
+    ``repro.core.dp._find_alloc_arrays`` per job.
+
+    ``avail_dev`` may carry a cached device buffer of ``avail`` (e.g.
+    ``ps.device_view('free')``) to skip the host->device upload.
+    Returns a list aligned with ``jobs``; entries are ``Candidate`` or
+    ``None``, bit-identical to the per-job path.
+    """
+    from repro.core.dp import COMM_COST_FRAC, Candidate
+
+    J = len(jobs)
+    if J == 0:
+        return []
+    if not HAS_JAX:
+        raise RuntimeError("find_alloc_batch requires jax")
+
+    gtypes = ps.cluster.gpu_types
+    M = len(ps.keys)
+    N = ps.n_node_rows
+    R = len(gtypes)
+    C = int(max(ps.cap_arr.max(initial=1.0), avail.max(initial=1.0), 1.0))
+
+    # ---- per-job gather tables (host; identical scalar math) -----------
+    B = bucket_size(J)
+    W = np.zeros(B)
+    W[:J] = [j.n_workers for j in jobs]
+    single = np.ones(B, dtype=bool)       # padded rows: no spread
+    single[:J] = [bool(j.single_node) for j in jobs]
+    tp = np.zeros((B, R))
+    tp[:J] = [[j.throughput.get(r, 0) for r in gtypes] for j in jobs]
+    usable_t = tp > 0
+    Kj = usable_t.sum(axis=1)
+    # preference order: throughput descending, gpu_types-order tiebreak —
+    # a stable argsort on -tp reproduces the reference's sorted() exactly
+    pref = np.argsort(-tp, axis=1, kind="stable")       # (B, R)
+    x_sorted = np.take_along_axis(tp, pref, axis=1)
+    kk = np.arange(R)
+    x_sorted = np.where(kk[None, :] < Kj[:, None], x_sorted, 0.0)
+    rank_t = np.empty((B, R), dtype=np.int64)
+    np.put_along_axis(rank_t, pref, np.broadcast_to(kk, (B, R)), axis=1)
+    rank_t = np.where(usable_t, rank_t, R)              # R == unusable
+    # U_j once per preference rank (Eq. 1b: payoff depends on the alloc
+    # only through its bottleneck rate)
+    rem = np.zeros(B)
+    rem[:J] = [j.remaining_iters for j in jobs]
+    arrival = np.zeros(B)
+    arrival[:J] = [j.arrival for j in jobs]
+    x_safe = np.where(kk[None, :] < Kj[:, None], x_sorted, 1.0)
+    ct = np.maximum(now + rem[:, None] / (x_safe * np.maximum(W, 1.0)
+                                          [:, None]) - arrival[:, None],
+                    1e-9)
+    if utility is effective_throughput:
+        # the default utility vectorizes bitwise: total_iters / max(., .)
+        tot = np.zeros(B)
+        tot[:J] = [j.total_iters for j in jobs]
+        u_tab = tot[:, None] / np.maximum(ct, 1e-9)
+    else:
+        u_tab = np.zeros((B, R))
+        for ji, job in enumerate(jobs):
+            for k in range(int(Kj[ji])):
+                u_tab[ji, k] = utility(job, float(ct[ji, k]))
+    u_tab = np.where(kk[None, :] < Kj[:, None], u_tab, 0.0)
+    rank = rank_t[:, ps.type_col]                       # (B, M)
+    usable = rank < Kj[:, None]
+    x_key = np.where(
+        usable,
+        x_sorted[np.arange(B)[:, None], np.minimum(rank, R - 1)], 1.0)
+
+    # ---- shared price tables (host NumPy: bitwise Eq. 5 prefixes) ------
+    P = ps.unit_prices(np.asarray(gamma, dtype=float), C)
+    cumP = np.zeros((M, C + 1))
+    np.cumsum(P, axis=1, out=cumP[:, 1:])
+
+    # ---- batched stable sort of the spread pool (host: NumPy's
+    # mergesort is the bitwise reference op and beats XLA's CPU sort) ----
+    avf = np.asarray(avail, dtype=float)
+    unit_ok = np.arange(C)[None, :] < avf[:, None]          # (M, C)
+    valid = usable[:, :, None] & unit_ok[None, :, :]        # (B, M, C)
+    ratio_o = np.where(valid, P[None, :, :] / x_key[:, :, None], np.inf)
+    L = M * C
+    ratio_flat = ratio_o.reshape(B, L)
+    order = np.argsort(ratio_flat, axis=-1, kind="stable")
+    s_ratio = np.take_along_axis(ratio_flat, order, axis=-1)
+    s_rank = np.take_along_axis(np.repeat(rank, C, axis=1), order, axis=-1)
+    s_valid = np.take_along_axis(valid.reshape(B, L), order, axis=-1)
+    s_price = P.reshape(-1)[order]
+
+    kern = _get_kernel(N, R, COMM_COST_FRAC)
+    node1h = (np.asarray(ps.node_row)[:, None]
+              == np.arange(N)[None, :]).astype(float)
+    with enable_x64():
+        avail_d = avail_dev if avail_dev is not None \
+            else jnp.asarray(avf)
+        out = kern(avail_d, jnp.asarray(P), jnp.asarray(cumP),
+                   jnp.asarray(node1h), ps.device_view("node_row"),
+                   jnp.asarray(W), jnp.asarray(Kj), jnp.asarray(rank),
+                   jnp.asarray(u_tab),
+                   jnp.asarray(single), jnp.asarray(s_rank),
+                   jnp.asarray(s_valid), jnp.asarray(s_price),
+                   jnp.asarray(s_ratio), jnp.asarray(order),
+                   jnp.asarray(ratio_o))
+    (feasible, k_first, j_last, take, packed_cost, packed_payoff,
+     sp_ok, sp_pay, sp_jmax, sp_nserv, sp_counts) = map(np.asarray, out)
+
+    # ---- winner selection in the reference enumeration order -----------
+    # flat candidate axis, per job: for each preference prefix k=1..R,
+    # the N consolidated node slots (a node is live under its *first*
+    # feasible prefix only), then the prefix's spread slot; np.argmax's
+    # first-maximum matches the reference's strict-> scan.
+    pay = np.full((J, R * (N + 1)), -np.inf)
+    for k in range(1, R + 1):
+        base = (k - 1) * (N + 1)
+        live = feasible[:J] & (k_first[:J] == k - 1)
+        pay[:, base:base + N] = np.where(live, packed_payoff[:J], -np.inf)
+        pay[:, base + N] = np.where(sp_ok[:J, k - 1], sp_pay[:J, k - 1],
+                                    -np.inf)
+    pay[Kj[:J] == 0] = -np.inf
+    win = np.argmax(pay, axis=1)
+    win_pay = pay[np.arange(J), win]
+
+    # ---- winner materialization -----------------------------------------
+    # Consolidated winners read the kernel's cost/payoff directly: the
+    # unrolled rank-axis accumulation inside the kernel *is* the reference
+    # summation order over bitwise-identical cumP gathers.  Spread winners
+    # (rarer) re-derive their cost on the host in the reference order.
+    found = win_pay > -np.inf
+    kb, slot = np.divmod(win, N + 1)
+    is_pack = found & (slot < N)
+    results: List = [None] * J
+    node_ids = [n.node_id for n in ps.cluster.nodes]
+
+    pj = np.nonzero(is_pack)[0]
+    if pj.size:
+        hs = slot[pj]
+        jl = j_last[pj, hs]
+        costs = packed_cost[pj, hs]
+        pays = packed_payoff[pj, hs]
+        rates = x_sorted[pj, jl]
+        takes = take[pj, hs].tolist()              # (Jp, R) python floats
+        prefs = pref[pj].tolist()
+        kjs = Kj[pj].tolist()
+        for i, j in enumerate(pj.tolist()):
+            payoff = float(pays[i])
+            if payoff <= 0 and not force:    # mu_j <= 0 (lines 29-33)
+                continue
+            tk = takes[i]
+            nid = node_ids[int(hs[i])]
+            alloc = {(nid, gtypes[prefs[i][kk]]): int(tk[kk])
+                     for kk in range(kjs[i]) if tk[kk] > 0}
+            results[j] = Candidate(alloc, float(costs[i]), payoff,
+                                   float(rates[i]))
+
+    for j in np.nonzero(found & (slot == N))[0].tolist():
+        k = int(kb[j]) + 1                              # spread prefix k
+        counts = sp_counts[j, k - 1]
+        ms = np.nonzero(counts)[0]
+        unit_m = np.repeat(ms, counts[ms])
+        unit_i = np.concatenate(
+            [np.arange(counts[m]) for m in ms]) if ms.size \
+            else np.zeros(0, dtype=np.intp)
+        prices = P[unit_m, unit_i]
+        # reference summation order == global stable sort restricted
+        # to the chosen units: ratio ascending, flat index tiebreak
+        o = np.lexsort((unit_m * C + unit_i, prices / x_key[j, unit_m]))
+        cost = float(prices[o].sum())
+        jmax = int(sp_jmax[j, k - 1])
+        nserv = int(sp_nserv[j, k - 1])
+        if nserv > 1:
+            cost += COMM_COST_FRAC * max(u_tab[j, jmax], 0.0) * (nserv - 1)
+        payoff = float(u_tab[j, jmax] - cost)
+        if payoff <= 0 and not force:       # mu_j <= 0 (lines 29-33)
+            continue
+        alloc = {ps.keys[m]: int(counts[m]) for m in ms}
+        results[j] = Candidate(alloc, cost, payoff,
+                               float(x_sorted[j, jmax]))
+    return results

@@ -23,6 +23,19 @@ once per GPU type (the gang payoff depends on the allocation only
 through its bottleneck rate, Eq. 1b).  Decisions are identical to the
 scalar reference — candidate enumeration order, tie-breaking, and the
 mu_j gate are preserved — which the engine-equivalence tests enforce.
+
+``solver`` selects the backend for the queue-wide scans: ``"jax"`` runs
+the batched device kernel (:mod:`repro.core.batch_solver`) — one fused
+call pricing every job — for the greedy path's standalone pass and the
+exact DP's empty-branch candidate scan, with the commit loop replaying
+winners through the NumPy kernel in the reference order; ``"numpy"``
+keeps the per-job path; ``"auto"``/None auto-detects (jax when
+importable and the queue is large enough to amortize dispatch).  Both
+backends produce bit-identical decisions.
+
+``free=None`` prices against the PriceState's persistent ``free_arr``
+(maintained incrementally by ``commit()``/``release()``) instead of
+projecting a free-count dict per call — the engines' hot path.
 """
 from __future__ import annotations
 
@@ -48,13 +61,6 @@ class Candidate:
     rate: float      # bottleneck iterations/sec (x_j)
 
 
-def _price_for(ps: PriceState, free: Dict, node_id: int, r: str,
-               taken: int, extra: Dict) -> float:
-    cap = ps._cap_by_key.get((node_id, r), 0)
-    g = ps.gamma.get((node_id, r), 0) + extra.get((node_id, r), 0) + taken
-    return ps.price(node_id, r, cap, gamma_override=g)
-
-
 def _estimate_payoff(job: Job, alloc: Alloc, cost: float, now: float,
                      utility: UtilityFn) -> float:
     rate = job.bottleneck_rate(alloc)
@@ -65,18 +71,20 @@ def _estimate_payoff(job: Job, alloc: Alloc, cost: float, now: float,
     return u - cost
 
 
-def find_alloc(job: Job, free: Dict[Tuple[int, str], int], ps: PriceState,
-               now: float, utility: UtilityFn,
+def find_alloc(job: Job, free: Optional[Dict[Tuple[int, str], int]],
+               ps: PriceState, now: float, utility: UtilityFn,
                extra_gamma: Optional[Dict] = None,
                force: bool = False) -> Optional[Candidate]:
     """Best feasible task-level allocation for ``job`` at current prices.
 
+    ``free`` is a free-count dict, or None to price against the
+    PriceState's persistent ``free_arr`` (no per-call dict projection).
     ``extra_gamma`` holds device counts already claimed by jobs selected
     earlier in the current DP branch (prices must reflect them).
     ``force`` skips the mu_j > 0 admission gate (work-conserving backfill).
     """
     extra = extra_gamma or {}
-    avail = ps.free_to_arr(free)
+    avail = ps.free_arr.copy() if free is None else ps.free_to_arr(free)
     gamma = ps.gamma_arr.copy()
     for k, v in extra.items():
         m = ps.key_index.get(k)
@@ -211,28 +219,51 @@ def _find_alloc_arrays(job: Job, avail: np.ndarray, gamma: np.ndarray,
                      float(x_types[jmax]))
 
 
-def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
+def _scan_standalone(queue: List[Job], avail0: np.ndarray,
+                     gamma0: np.ndarray, ps: PriceState, now: float,
+                     utility: UtilityFn, solver: Optional[str],
+                     free_is_ps: bool) -> List[Optional[Candidate]]:
+    """Standalone candidate per queued job against one shared state —
+    one fused device call on the jax backend, a per-job loop otherwise."""
+    from repro.core.batch_solver import use_batch
+
+    if use_batch(solver, len(queue)):
+        from repro.core.batch_solver import find_alloc_batch
+        dev = ps.device_view("free") if free_is_ps else None
+        return find_alloc_batch(queue, avail0, gamma0, ps, now, utility,
+                                avail_dev=dev)
+    return [_find_alloc_arrays(j, avail0, gamma0, ps, now, utility,
+                               force=False) for j in queue]
+
+
+def dp_allocation(queue: List[Job],
+                  free: Optional[Dict[Tuple[int, str], int]],
                   ps: PriceState, now: float, utility: UtilityFn,
-                  max_exact: int = 64) -> Dict[int, Candidate]:
+                  max_exact: int = 64,
+                  solver: Optional[str] = None) -> Dict[int, Candidate]:
     """Select jobs + allocations maximizing total payoff (Algorithm 2).
 
     Exact select/skip DP with memoization for queues up to ``max_exact``;
     longer queues are processed in payoff-sorted greedy chunks (the paper
     handles 2048-job rounds in <7 min by incrementally allocating new jobs
     only — same spirit).  The greedy path keeps the cluster state as
-    arrays and commits winners incrementally — no per-job dict rebuild."""
+    arrays and commits winners incrementally — no per-job dict rebuild.
+
+    ``solver`` picks the backend for the queue-wide candidate scans (see
+    module docstring); the greedy commit loop always replays winners
+    through the NumPy kernel in the reference order, so decisions are
+    backend-independent."""
+    free_is_ps = free is None
     if len(queue) > max_exact:
-        avail0 = ps.free_to_arr(free)
+        avail0 = ps.free_arr.copy() if free_is_ps else ps.free_to_arr(free)
         gamma0 = ps.gamma_arr.copy()
         # greedy pass: highest standalone payoff first
-        order = []
-        for j in queue:
-            c = _find_alloc_arrays(j, avail0, gamma0, ps, now, utility,
-                                   force=False)
-            if c:
-                # payoff *density* (per requested device): lets several
-                # small jobs beat one large one under contention
-                order.append((c.payoff / max(1, j.n_workers), j))
+        cands = _scan_standalone(queue, avail0, gamma0, ps, now, utility,
+                                 solver, free_is_ps)
+        # payoff *density* (per requested device): lets several
+        # small jobs beat one large one under contention
+        order = [(c.payoff / max(1, j.n_workers), j)
+                 for j, c in zip(queue, cands) if c]
         order.sort(key=lambda t: -t[0])
         chosen: Dict[int, Candidate] = {}
         avail = avail0
@@ -250,6 +281,16 @@ def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
 
     memo: Dict = {}
 
+    # the all-skip spine of the DP evaluates every job once at the empty
+    # server state — batch that scan in one fused call and seed rec()
+    # from it (identical candidates, so identical branch decisions)
+    from repro.core.batch_solver import use_batch
+    seed: Optional[List[Optional[Candidate]]] = None
+    if queue and use_batch(solver, len(queue)):
+        avail0 = ps.free_arr.copy() if free_is_ps else ps.free_to_arr(free)
+        seed = _scan_standalone(queue, avail0, ps.gamma_arr.copy(), ps,
+                                now, utility, solver, free_is_ps)
+
     def key_of(extra: Dict) -> Tuple:
         return tuple(sorted((k, v) for k, v in extra.items() if v))
 
@@ -263,7 +304,11 @@ def dp_allocation(queue: List[Job], free: Dict[Tuple[int, str], int],
         best_v, best_sel = rec(idx + 1, extra)
         # branch 2: allocate job (line 14)
         job = queue[idx]
-        cand = find_alloc(job, free, ps, now, utility, extra_gamma=extra)
+        if seed is not None and not extra:
+            cand = seed[idx]
+        else:
+            cand = find_alloc(job, free, ps, now, utility,
+                              extra_gamma=extra)
         if cand is not None:
             extra2 = dict(extra)
             for kk, v in cand.alloc.items():

@@ -131,7 +131,8 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                     restart_penalty: float = RESTART_PENALTY,
                     n_copies: Optional[int] = None,
                     scheduler: Optional[HadarScheduler] = None,
-                    sync_overhead: float = 5.0) -> SimResult:
+                    sync_overhead: float = 5.0,
+                    solver: Optional[str] = None) -> SimResult:
     """Round-based HadarE simulation.  ``jobs`` are parents; metrics are
     reported at parent granularity (SimResult.jobs == parents).
 
@@ -148,4 +149,5 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
     return _vectorized(jobs, cluster, round_len=round_len,
                        max_rounds=max_rounds,
                        restart_penalty=restart_penalty, n_copies=n_copies,
-                       scheduler=scheduler, sync_overhead=sync_overhead)
+                       scheduler=scheduler, sync_overhead=sync_overhead,
+                       solver=solver)

@@ -15,6 +15,24 @@ array ops instead of per-device Python loops.  ``gamma`` stays a dict for
 API compatibility but write-through-syncs the ``gamma_arr`` vector, so
 `commit()`/`release()` (and direct dict mutation in tests) keep both
 views consistent incrementally.
+
+The state is *incremental* across scheduler consultations:
+
+- ``free_arr`` is a persistent free-device vector on the key axis,
+  maintained by `commit()`/`release()` deltas — callers that thread the
+  PriceState through a round (Hadar's scheduler, the event engine) never
+  re-project a ``free`` dict per call.
+- `refresh()` re-primes an existing instance for a new scheduling point
+  (new active set / ``now``) *in place*: the U-bounds are recomputed
+  (O(J + R) after hoisting the type-invariant job scan), gamma and free
+  are reset, and every array keeps its identity, so long-running engines
+  (``repro.sim.engine.simulate_events``) price each event step without
+  rebuilding arrays.
+- `device_view()` caches JAX device buffers of the state vectors for the
+  batched solver (``repro.core.batch_solver``); a dirty-flag per view —
+  invalidated by the ``_GammaDict`` write-through, `commit()`/
+  `release()`, and `refresh()` — bounds host->device uploads to actual
+  mutations.
 """
 from __future__ import annotations
 
@@ -38,6 +56,7 @@ class _GammaDict(dict):
         idx = self._ps.key_index.get(key)
         if idx is not None:
             self._ps.gamma_arr[idx] = value
+            self._ps._touch("gamma")
 
     def __setitem__(self, key, value):
         super().__setitem__(key, value)
@@ -75,6 +94,7 @@ class _GammaDict(dict):
     def clear(self):
         super().clear()
         self._ps.gamma_arr[:] = 0
+        self._ps._touch("gamma")
 
 
 class PriceState:
@@ -105,15 +125,17 @@ class PriceState:
         eta = max(cap_total / max(j.t_max() * j.n_workers, 1e-9)
                   for j in jobs)
         eta = max(eta, 1.0)
+        # the per-job best/worst scan is type-invariant, so it runs once
+        # (O(J + R)) instead of once per type
+        best, worst = 0.0, float("inf")
+        for j in jobs:
+            u_best = self.utility(j, max(j.t_min(), 1e-9))
+            best = max(best, u_best / max(j.n_workers, 1))
+            u_floor = self.utility(j, max(self.horizon - j.arrival,
+                                          j.t_min(), 1e-9))
+            worst = min(worst,
+                        u_floor / (j.t_max() * j.n_workers))
         for r in types:
-            best, worst = 0.0, float("inf")
-            for j in jobs:
-                u_best = self.utility(j, max(j.t_min(), 1e-9))
-                best = max(best, u_best / max(j.n_workers, 1))
-                u_floor = self.utility(j, max(self.horizon - j.arrival,
-                                              j.t_min(), 1e-9))
-                worst = min(worst,
-                            u_floor / (j.t_max() * j.n_workers))
             self.u_max[r] = max(best, 1e-12)
             self.u_min[r] = max(min(worst / (4.0 * eta),
                                     self.u_max[r] / math.e), 1e-15)
@@ -141,10 +163,76 @@ class PriceState:
         self.umax_arr = np.array([self.u_max[r] for (_, r) in self.keys])
         self.q_arr = self.umax_arr / self.umin_arr
         self.gamma_arr = np.zeros(len(self.keys))
+        # persistent free-device vector, maintained by commit()/release()
+        self.free_arr = self.cap_arr.copy()
         self._cap_by_key = dict(zip(self.keys, (int(c) for c in caps)))
+        self._geometry = self._fingerprint(self.cluster)
+        # cached JAX device buffers (see device_view); everything dirty
+        # until first upload
+        self._dev: Dict[str, object] = {}
+        self._dirty = set(self._VIEWS)
+
+    # views exposed to the batched solver; name -> backing array attribute
+    _VIEWS = {"gamma": "gamma_arr", "free": "free_arr", "cap": "cap_arr",
+              "umin": "umin_arr", "umax": "umax_arr", "q": "q_arr",
+              "node_row": "node_row", "type_col": "type_col"}
+
+    def _touch(self, *names: str) -> None:
+        """Mark device views stale after a host-array mutation."""
+        self._dirty.update(names)
+
+    @staticmethod
+    def _fingerprint(cluster: Cluster):
+        return tuple((n.node_id, tuple(n.gpus.items()))
+                     for n in cluster.nodes)
+
+    def matches(self, cluster: Cluster) -> bool:
+        """True iff this state's key arrays are still valid for
+        ``cluster`` — same object AND unchanged node/GPU geometry, so
+        long-lived schedulers detect in-place cluster mutation (node
+        failure, capacity change) and rebuild instead of pricing
+        against stale capacity."""
+        return (self.cluster is cluster
+                and self._geometry == self._fingerprint(cluster))
+
+    def device_view(self, name: str):
+        """Cached JAX device buffer of state vector ``name``.
+
+        The buffer is re-uploaded only when the backing host array was
+        mutated since the last call (write-through dirty flag), so a
+        sequence of event-engine consultations that only commit/release a
+        few allocations pays O(mutations) transfers, not O(calls).
+        """
+        if name not in self._VIEWS:
+            raise KeyError(f"no device view named {name!r}")
+        if name in self._dirty or name not in self._dev:
+            from repro.core.batch_solver import to_device
+            self._dev[name] = to_device(getattr(self, self._VIEWS[name]))
+            self._dirty.discard(name)
+        return self._dev[name]
+
+    def refresh(self, jobs: List[Job], now: float) -> None:
+        """Re-prime this instance for a new scheduling point, in place.
+
+        Equivalent to constructing ``PriceState(cluster, jobs, horizon,
+        utility, now)`` but without rebuilding the key arrays: U-bounds
+        are recomputed for the new active set, gamma and the free vector
+        reset, and every array object keeps its identity (the event
+        engine's cached device buffers stay valid until dirtied)."""
+        self.u_max.clear()
+        self.u_min.clear()
+        self._compute_bounds(jobs, now)
+        self.umin_arr[:] = [self.u_min[r] for (_, r) in self.keys]
+        self.umax_arr[:] = [self.u_max[r] for (_, r) in self.keys]
+        np.divide(self.umax_arr, self.umin_arr, out=self.q_arr)
+        self.gamma.clear()                  # zeroes gamma_arr in place
+        self.free_arr[:] = self.cap_arr
+        self._touch("umin", "umax", "q", "free")
 
     def free_to_arr(self, free: Dict[Tuple[int, str], int]) -> np.ndarray:
-        """Project a free-count dict onto the key axis."""
+        """Project a free-count dict onto the key axis.  Compatibility
+        path for callers holding dict state; the engines use the
+        persistent ``free_arr`` instead."""
         return np.array([float(free.get(k, 0)) for k in self.keys])
 
     def unit_prices(self, gamma_arr: np.ndarray,
@@ -173,10 +261,19 @@ class PriceState:
     def commit(self, alloc: Dict[Tuple[int, str], int]) -> None:
         for key, c in alloc.items():
             self.gamma[key] = self.gamma.get(key, 0) + c
+            m = self.key_index.get(key)
+            if m is not None:
+                self.free_arr[m] -= c
+        self._touch("free")
 
     def release(self, alloc: Dict[Tuple[int, str], int]) -> None:
         for key, c in alloc.items():
             self.gamma[key] = max(0, self.gamma.get(key, 0) - c)
+            m = self.key_index.get(key)
+            if m is not None:
+                self.free_arr[m] = min(self.cap_arr[m],
+                                       self.free_arr[m] + c)
+        self._touch("free")
 
     def snapshot(self) -> Tuple:
         return tuple(sorted((k, v) for k, v in self.gamma.items() if v))

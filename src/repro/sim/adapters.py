@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core.schedulers import Scheduler
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
-from repro.sim.engine import (RESTART_PENALTY, _alloc_equal, _job_penalty,
+from repro.sim.engine import (RESTART_PENALTY, _alloc_equal,
+                              _apply_solver, _job_penalty,
                               simulate_events, simulate_rounds)
 from repro.sim.metrics import RoundRecord, SimResult
 
@@ -45,6 +46,17 @@ class CountingScheduler(Scheduler):
         self.stable_when_idle = inner.stable_when_idle
         self.calls = 0
         self.total_seconds = 0.0
+
+    @property
+    def solver(self):
+        """Delegated so engine-level ``solver=`` overrides reach the
+        wrapped scheduler (only exposed when the inner one has it)."""
+        return getattr(self.inner, "solver", None)
+
+    @solver.setter
+    def solver(self, value):
+        if hasattr(self.inner, "solver"):
+            self.inner.solver = value
 
     def note_completion(self) -> None:
         if hasattr(self.inner, "note_completion"):
@@ -78,13 +90,18 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                     restart_penalty: float = RESTART_PENALTY,
                     n_copies: Optional[int] = None,
                     scheduler=None, sync_overhead: float = 5.0,
-                    fast_forward: bool = True) -> SimResult:
+                    fast_forward: bool = True,
+                    solver: Optional[str] = None) -> SimResult:
     """Vectorized, event-aware HadarE simulation (see module docstring).
-    ``jobs`` are parents; metrics are reported at parent granularity."""
+    ``jobs`` are parents; metrics are reported at parent granularity.
+    ``solver`` picks the Hadar core's pricing backend ("jax" | "numpy" |
+    "auto"); copies price through the same batched kernel (their
+    ``single_node`` constraint is a kernel input)."""
     from repro.core.hadar import HadarScheduler
     from repro.core.hadare import _dedupe_siblings, fork_job
 
     sched = scheduler or HadarScheduler()
+    _apply_solver(sched, solver)
     parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     for p in parents:
         p.done_iters = 0.0

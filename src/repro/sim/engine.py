@@ -71,11 +71,23 @@ def _reset_jobs(jobs: List[Job]) -> None:
 # round-quantized engine (compatibility mode)
 # ---------------------------------------------------------------------------
 
+def _apply_solver(scheduler, solver: Optional[str]) -> None:
+    """Engine-level pricing-backend override: forwarded to schedulers
+    that expose a ``solver`` flag (Hadar's batched dual subroutine);
+    silently ignored for solver-less baselines."""
+    if solver is not None and hasattr(scheduler, "solver"):
+        scheduler.solver = solver
+
+
 def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_rounds: int = 20000,
-                    restart_penalty: float = RESTART_PENALTY) -> SimResult:
+                    restart_penalty: float = RESTART_PENALTY,
+                    solver: Optional[str] = None) -> SimResult:
     """Round-based simulation; byte-identical to the seed round loop on
-    dense traces, O(events) on sparse ones via steady fast-forward."""
+    dense traces, O(events) on sparse ones via steady fast-forward.
+    ``solver`` ("jax" | "numpy" | "auto") overrides the scheduler's
+    pricing backend; decisions are backend-independent."""
+    _apply_solver(scheduler, solver)
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(jobs)
     total_gpus = cluster.total_gpus()
@@ -202,8 +214,8 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
 
 def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_events: int = 500000,
-                    restart_penalty: float = RESTART_PENALTY
-                    ) -> EventSimResult:
+                    restart_penalty: float = RESTART_PENALTY,
+                    solver: Optional[str] = None) -> EventSimResult:
     """Continuous-time simulation: t jumps to the next event.
 
     ``round_len`` keeps two roles: the scheduling quantum for schedulers
@@ -211,7 +223,13 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     ``round_len`` while jobs are active), and the value passed to
     ``scheduler.schedule`` so scheduler-side heuristics see the same
     horizon as in round mode.
+
+    ``solver`` overrides the scheduler's pricing backend (see
+    ``simulate_rounds``).  Schedulers with incremental PriceState (Hadar)
+    price each event step against persistent arrays — no per-consult
+    state rebuild.
     """
+    _apply_solver(scheduler, solver)
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(jobs)
     by_id = {j.job_id: j for j in jobs}

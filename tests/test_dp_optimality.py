@@ -64,13 +64,15 @@ def brute_force_best(jobs, cluster, ps, utility):
             cand = find_alloc(j, free0, ps, 0.0, utility,
                               extra_gamma=extra, force=True)
             # evaluate THIS combo's alloc at current prices via payoff est
-            from repro.core.dp import _estimate_payoff, _price_for
+            from repro.core.dp import _estimate_payoff
             cost = 0.0
             taken = {}
             for (h, r), c in alloc.items():
                 for i in range(c):
-                    cost += _price_for(ps, free0, h, r,
-                                       taken.get((h, r), 0), extra)
+                    g = (ps.gamma.get((h, r), 0) + extra.get((h, r), 0)
+                         + taken.get((h, r), 0))
+                    cost += ps.price(h, r, ps._cap_by_key.get((h, r), 0),
+                                     gamma_override=g)
                     taken[(h, r)] = taken.get((h, r), 0) + 1
             total += max(0.0, _estimate_payoff(j, alloc, cost, 0.0,
                                                utility))
