@@ -34,7 +34,9 @@ To stay machine-independent, the gates compare *normalized* numbers:
 ``--quick`` runs a seconds-scale smoke over a tiny trace: both engines
 and the HadarE backend must complete every job and agree within the
 documented quantization tolerance, and (when jax is importable) the
-batched solver must match the per-job path on small shapes.  No
+batched solver must match the per-job path on small shapes.  It also
+lints src/ with ``repro.analysis`` against the committed
+``analysis_baseline.json`` — zero non-baselined findings.  No perf
 baselines are touched.
 """
 import argparse
@@ -179,10 +181,21 @@ def quick_smoke() -> None:
             f"jit smoke: {jit['mismatches']} decision mismatches"
         jit_msg = f"jit n=32 match ({jit['jit_s']*1e3:.0f}ms/call)"
 
+    # analysis smoke: the shipped src/ tree must lint clean against the
+    # committed baseline (same gate as tests/test_analysis_gate.py)
+    from repro.analysis.engine import lint_paths
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    report = lint_paths([os.path.join(repo, "src")], root=repo,
+                        baseline_path=os.path.join(
+                            repo, "analysis_baseline.json"))
+    assert report.clean, "analysis smoke:\n" + "\n".join(
+        f.render() for f in report.parse_errors + report.findings)
+    lint_msg = f"lint clean ({len(report.suppressed)} baselined)"
+
     print(f"quick smoke passed: round TTD {rr.total_seconds:.0f}s, "
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
-          f"hadare TTD {rh.total_seconds:.0f}s, {jit_msg}")
+          f"hadare TTD {rh.total_seconds:.0f}s, {jit_msg}, {lint_msg}")
 
 
 def main():

@@ -1,0 +1,26 @@
+"""Static analysis + runtime sanitizer for the repro codebase.
+
+Two halves:
+
+* ``python -m repro.analysis [paths]`` — an stdlib-``ast`` linter with
+  four codebase-specific passes (jit-purity, bitwise-reference,
+  determinism, recompile-hazard) and a committed baseline-suppression
+  file (``analysis_baseline.json``).  Runs over ``src/`` as a tier-1
+  pytest gate.
+* ``repro.analysis.invariants`` — an opt-in runtime sanitizer
+  (``REPRO_SANITIZE=1`` or ``sanitize=True``) asserting the paper's
+  primal-dual invariants inside ``PriceState``, ``dp_allocation`` and
+  both ``repro.sim`` engines.
+"""
+from .baseline import (BASELINE_NAME, discover_baseline, load_baseline,
+                       save_baseline)
+from .engine import LintReport, lint_paths, lint_source
+from .findings import Finding
+from .invariants import InvariantViolation, sanitize_enabled
+from .passes import PASS_DOC, default_passes
+
+__all__ = [
+    "BASELINE_NAME", "Finding", "InvariantViolation", "LintReport",
+    "PASS_DOC", "default_passes", "discover_baseline", "lint_paths",
+    "lint_source", "load_baseline", "sanitize_enabled", "save_baseline",
+]

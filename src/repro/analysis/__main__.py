@@ -1,0 +1,80 @@
+"""CLI entry point: ``python -m repro.analysis [paths ...]``.
+
+Exit codes: 0 clean (after baseline suppression), 1 findings or parse
+errors, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+from . import baseline as baseline_mod
+from .engine import lint_paths
+from .passes import PASS_DOC, default_passes
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Lint the repro codebase for JAX-purity, bitwise-"
+                    "reference, determinism and recompile hazards.")
+    p.add_argument("paths", nargs="*", default=None,
+                   help="files or directories to lint (default: src/ "
+                        "if present, else .)")
+    p.add_argument("--baseline", default="auto", metavar="PATH",
+                   help="baseline suppression file (default: discover "
+                        "analysis_baseline.json walking up from the "
+                        "first path)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any baseline file; report everything")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write all current findings to the baseline "
+                        "file and exit 0")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--list-passes", action="store_true",
+                   help="list lint passes and their codes, then exit")
+    return p
+
+
+def main(argv: List[str] | None = None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_passes:
+        for p in default_passes():
+            print(f"{p.name:20s} {PASS_DOC[p.name]}")
+        return 0
+    paths = args.paths or (["src"] if os.path.isdir("src") else ["."])
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+    baseline_path = None if args.no_baseline else args.baseline
+    if baseline_path == "auto":
+        baseline_path = baseline_mod.discover_baseline(paths[0])
+    if args.write_baseline:
+        report = lint_paths(paths, baseline_path=None)
+        target = baseline_path or os.path.join(
+            os.getcwd(), baseline_mod.BASELINE_NAME)
+        baseline_mod.save_baseline(target, report.findings)
+        print(f"wrote {len(report.findings)} suppression(s) to {target}")
+        return 0
+    report = lint_paths(paths, baseline_path=baseline_path)
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        for f in report.parse_errors + report.findings:
+            print(f.render())
+        for e in report.stale:
+            print(f"stale suppression (no longer matches): "
+                  f"{e['code']} {e['path']} :: {e['line_text']}")
+        n = len(report.findings) + len(report.parse_errors)
+        msg = (f"{n} finding(s), {len(report.suppressed)} suppressed by "
+               f"baseline, {len(report.stale)} stale suppression(s)")
+        print(msg if n or report.stale else f"clean: {msg}")
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

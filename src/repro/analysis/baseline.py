@@ -1,0 +1,78 @@
+"""Baseline-suppression file handling.
+
+The baseline is a committed JSON file (``analysis_baseline.json`` at the
+repo root) listing findings that were triaged and accepted, each with a
+human-written justification.  A finding is suppressed when its
+fingerprint — ``(code, path, stripped line text)`` — matches an entry;
+line numbers are deliberately excluded so unrelated edits above a
+baselined line do not invalidate it, while *any* edit to the flagged
+line itself re-surfaces the finding for re-triage.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .findings import Finding
+
+BASELINE_NAME = "analysis_baseline.json"
+
+Fingerprint = Tuple[str, str, str]
+
+
+def discover_baseline(start: str) -> Optional[str]:
+    """Walk up from ``start`` looking for the committed baseline file."""
+    cur = os.path.abspath(start)
+    if os.path.isfile(cur):
+        cur = os.path.dirname(cur)
+    while True:
+        cand = os.path.join(cur, BASELINE_NAME)
+        if os.path.isfile(cand):
+            return cand
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return None
+        cur = parent
+
+
+def load_baseline(path: Optional[str]) -> List[dict]:
+    if path is None or not os.path.isfile(path):
+        return []
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    return list(data.get("suppressions", []))
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    entries = []
+    for f in sorted(set(f.fingerprint() for f in findings)):
+        code, fpath, line_text = f
+        entries.append({
+            "code": code,
+            "path": fpath,
+            "line_text": line_text,
+            "justification": "TODO: explain why this finding is accepted",
+        })
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"suppressions": entries}, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+
+
+def split_by_baseline(findings: List[Finding], entries: List[dict]):
+    """Partition findings into (active, suppressed) and report stale
+    baseline entries that no longer match anything."""
+    table: Dict[Fingerprint, dict] = {
+        (e["code"], e["path"], e["line_text"]): e for e in entries}
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    used: Set[Fingerprint] = set()
+    for f in findings:
+        fp = f.fingerprint()
+        if fp in table:
+            suppressed.append(f)
+            used.add(fp)
+        else:
+            active.append(f)
+    stale = [e for fp, e in table.items() if fp not in used]
+    return active, suppressed, stale

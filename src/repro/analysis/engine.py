@@ -1,0 +1,105 @@
+"""Lint driver: file discovery, pass execution, baseline filtering."""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Sequence
+
+from . import baseline as baseline_mod
+from .findings import Finding
+from .passes import LintPass, Module, default_passes
+
+
+class LintReport:
+    def __init__(self, findings: List[Finding], suppressed: List[Finding],
+                 stale: List[dict], parse_errors: List[Finding]):
+        self.findings = findings          # active (non-baselined)
+        self.suppressed = suppressed
+        self.stale = stale                # baseline entries matching nothing
+        self.parse_errors = parse_errors
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings and not self.parse_errors
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [f.to_json() for f in self.findings],
+            "parse_errors": [f.to_json() for f in self.parse_errors],
+            "suppressed": len(self.suppressed),
+            "stale_suppressions": self.stale,
+        }
+
+
+def _iter_py_files(paths: Sequence[str]):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+        else:
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in {"__pycache__", ".git", ".pytest_cache"})
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        yield os.path.join(dirpath, name)
+
+
+def _rel_posix(path: str, root: str) -> str:
+    rel = os.path.relpath(os.path.abspath(path), root)
+    return rel.replace(os.sep, "/")
+
+
+def lint_source(source: str, path: str = "src/repro/core/_memory.py",
+                passes: Optional[Sequence[LintPass]] = None
+                ) -> List[Finding]:
+    """Lint an in-memory snippet (used by the fixture tests).
+
+    ``path`` participates in path-scoped passes (bitwise-reference only
+    fires under ``repro/core/``), so fixtures pick the scope they need.
+    """
+    tree = ast.parse(source)
+    mod = Module(tree, path, source)
+    out: List[Finding] = []
+    for p in (passes if passes is not None else default_passes()):
+        out.extend(p.run(mod))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return out
+
+
+def lint_paths(paths: Sequence[str], root: Optional[str] = None,
+               baseline_path: Optional[str] = "auto",
+               passes: Optional[Sequence[LintPass]] = None) -> LintReport:
+    """Lint files/trees.  ``baseline_path="auto"`` walks up from the
+    first path to find ``analysis_baseline.json``; ``None`` disables
+    suppression entirely."""
+    if baseline_path == "auto":
+        baseline_path = baseline_mod.discover_baseline(
+            paths[0] if paths else os.getcwd())
+    if root is None:
+        root = (os.path.dirname(os.path.abspath(baseline_path))
+                if baseline_path else os.getcwd())
+    active_passes = list(passes if passes is not None else default_passes())
+    findings: List[Finding] = []
+    parse_errors: List[Finding] = []
+    for fpath in _iter_py_files(paths):
+        rel = _rel_posix(fpath, root)
+        with open(fpath, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            tree = ast.parse(source, filename=fpath)
+        except SyntaxError as exc:
+            parse_errors.append(Finding(
+                "RA000", "parse", rel, exc.lineno or 1,
+                (exc.offset or 1) - 1, f"syntax error: {exc.msg}",
+                (exc.text or "").strip()))
+            continue
+        mod = Module(tree, rel, source)
+        for p in active_passes:
+            findings.extend(p.run(mod))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    entries = baseline_mod.load_baseline(baseline_path)
+    active, suppressed, stale = baseline_mod.split_by_baseline(
+        findings, entries)
+    return LintReport(active, suppressed, stale, parse_errors)

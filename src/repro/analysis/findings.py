@@ -1,0 +1,44 @@
+"""Finding records emitted by the lint passes.
+
+A finding is anchored to (pass code, file, line) but *fingerprinted* by
+(code, path, stripped source line) so committed baseline suppressions
+survive unrelated edits that shift line numbers.  Paths are stored
+POSIX-style relative to the lint root (the directory holding the
+baseline file), so fingerprints are machine-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str            # e.g. "RA301"
+    pass_name: str       # e.g. "determinism"
+    path: str            # POSIX path relative to the lint root
+    line: int            # 1-based
+    col: int             # 0-based
+    message: str
+    line_text: str       # stripped source line (fingerprint component)
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.code, self.path, self.line_text)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"[{self.pass_name}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def make_finding(code: str, pass_name: str, path: str, node,
+                 message: str, source_lines) -> Finding:
+    """Build a Finding from an AST node (uses its lineno/col_offset)."""
+    line = getattr(node, "lineno", 1)
+    col = getattr(node, "col_offset", 0)
+    text: str = ""
+    if source_lines and 1 <= line <= len(source_lines):
+        text = source_lines[line - 1].strip()
+    return Finding(code, pass_name, path, line, col, message, text)

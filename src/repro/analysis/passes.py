@@ -1,0 +1,528 @@
+"""Codebase-specific AST lint passes.
+
+Four passes, each targeting a concrete failure mode of this repo:
+
+* ``jit-purity`` (RA101-RA103) — functions traced by ``jax.jit`` /
+  ``jax.vmap`` must be pure: no ``global``/``nonlocal`` rebinding, no
+  mutation of enclosing-scope containers, and no Python-side ``if`` /
+  ``while`` branching on traced parameters (tracer leaks raise
+  ``ConcretizationTypeError`` at best, silently bake in a constant at
+  worst).
+* ``bitwise-reference`` (RA201) — decision-path modules under
+  ``repro/core/`` are pinned *bitwise* to the scalar NumPy oracle in
+  ``tests/_seed_reference.py``.  XLA lowerings of ``jnp.cumsum``,
+  ``jnp.power``, ``jnp.sort``/``argsort`` and 3-operand ``jnp.einsum``
+  are not guaranteed bit-identical to NumPy, so any use there is a
+  drift hazard that must be host-side, exact-integer, or baselined
+  with a written justification.
+* ``determinism`` (RA301-RA304) — scheduling decisions must replay
+  identically: ``np.argsort`` without ``kind="stable"`` permutes ties
+  (quicksort), iterating a ``set`` observes hash order, and global or
+  hard-seeded ``np.random`` hides reproducibility state in library
+  code.
+* ``recompile-hazard`` (RA401-RA403) — every jitted solver call must
+  go through the power-of-2 padding buckets (``bucket_size``) and a
+  memoized kernel; constructing ``jax.jit`` inside a loop or invoking
+  ``jax.jit(f)(x)`` inline recompiles per call.
+
+All passes are stdlib-``ast`` only.  They are deliberately
+conservative: a call target that cannot be resolved within the module
+is skipped, not guessed at.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .findings import Finding, make_finding
+
+# Attribute reads on a traced value that are static (shape metadata),
+# hence fine to branch on in Python.
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+# Callables whose lowering XLA does not pin bit-identical to NumPy.
+DRIFT_FUNCS = {"cumsum", "power", "sort", "argsort"}
+
+# Mutating container methods (RA102).
+MUTATORS = {"append", "extend", "insert", "update", "add", "pop",
+            "popitem", "clear", "setdefault", "remove", "discard"}
+
+# Global-state numpy.random callables (RA303).
+GLOBAL_NP_RANDOM = {"rand", "randn", "randint", "random", "random_sample",
+                    "uniform", "normal", "exponential", "poisson",
+                    "choice", "shuffle", "permutation", "seed"}
+
+JIT_WRAPPERS = {"jax.jit", "jax.vmap", "jax.pmap"}
+
+# Modules pinned bitwise to the scalar NumPy oracle.
+DECISION_PATH_GLOBS = ("*repro/core/*",)
+
+# Kernel-dispatch helpers of the batched solver (RA402).
+KERNEL_GETTERS = {"_get_kernel"}
+PAD_HELPERS = {"bucket_size"}
+
+
+# --------------------------------------------------------------------------
+# Shared AST utilities
+# --------------------------------------------------------------------------
+
+def attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._ra_parent = node  # type: ignore[attr-defined]
+
+
+def parent_of(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_ra_parent", None)
+
+
+def ancestors(node: ast.AST) -> Iterable[ast.AST]:
+    cur = parent_of(node)
+    while cur is not None:
+        yield cur
+        cur = parent_of(cur)
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to the dotted origin they were imported as."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                local = a.asname or a.name.split(".")[0]
+                aliases[local] = a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(expr: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve ``np.random.seed`` → ``numpy.random.seed`` (or None)."""
+    parts: List[str] = []
+    cur = expr
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    base = aliases.get(cur.id, cur.id)
+    parts.append(base)
+    return ".".join(reversed(parts))
+
+
+class Module:
+    """Parsed module handed to each pass."""
+
+    def __init__(self, tree: ast.Module, path: str, source: str):
+        self.tree = tree
+        self.path = path  # POSIX, relative to the lint root
+        self.lines = source.splitlines()
+        attach_parents(tree)
+        self.aliases = import_aliases(tree)
+
+    def finding(self, code: str, pass_name: str, node: ast.AST,
+                message: str) -> Finding:
+        return make_finding(code, pass_name, self.path, node, message,
+                            self.lines)
+
+
+class LintPass:
+    name = "base"
+    codes: Sequence[str] = ()
+
+    def run(self, mod: Module) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# jit-purity (RA101-RA103)
+# --------------------------------------------------------------------------
+
+def _is_jit_wrapper(expr: ast.AST, aliases: Dict[str, str]) -> bool:
+    dn = dotted_name(expr, aliases)
+    return dn in JIT_WRAPPERS or dn in {"jit", "vmap", "pmap"}
+
+
+def _defs_by_scope(tree: ast.AST) -> Dict[str, List[ast.FunctionDef]]:
+    out: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(node)
+    return out
+
+
+def _scope_chain(node: ast.AST) -> List[ast.AST]:
+    """Enclosing function defs, innermost first."""
+    return [a for a in ancestors(node)
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda))]
+
+
+def _resolve_jit_target(arg: ast.AST, mod: Module,
+                        defs: Dict[str, List[ast.FunctionDef]]):
+    """Resolve the first argument of a jit/vmap call to a def/lambda.
+
+    Handles nesting like ``jax.jit(jax.vmap(f))``.  Returns None when
+    the target is not resolvable within this module (imported name,
+    result of a factory call, ...) — conservative skip.
+    """
+    if isinstance(arg, ast.Lambda):
+        return arg
+    if isinstance(arg, ast.Call) and _is_jit_wrapper(arg.func, mod.aliases):
+        if arg.args:
+            return _resolve_jit_target(arg.args[0], mod, defs)
+        return None
+    if isinstance(arg, ast.Name):
+        candidates = defs.get(arg.id, [])
+        if not candidates:
+            return None
+        # Pick the candidate whose scope chain is a suffix of the call
+        # site's (nearest enclosing definition), falling back to a
+        # module-level def.
+        call_chain = _scope_chain(arg)
+        best = None
+        for cand in candidates:
+            cand_chain = _scope_chain(cand)
+            if all(c in call_chain for c in cand_chain):
+                if best is None or len(_scope_chain(best)) < len(cand_chain):
+                    best = cand
+        return best
+    return None
+
+
+def _collect_jitted(mod: Module):
+    """Yield (fn_node, reason_node) for every jit/vmap-traced function."""
+    defs = _defs_by_scope(mod.tree)
+    seen = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                # @partial(jax.jit, ...) — unwrap functools.partial
+                if (isinstance(dec, ast.Call)
+                        and dotted_name(dec.func, mod.aliases)
+                        in {"functools.partial", "partial"} and dec.args):
+                    target = dec.args[0]
+                if _is_jit_wrapper(target, mod.aliases):
+                    if id(node) not in seen:
+                        seen.add(id(node))
+                        yield node, dec
+        elif isinstance(node, ast.Call) and _is_jit_wrapper(node.func,
+                                                            mod.aliases):
+            if node.args:
+                fn = _resolve_jit_target(node.args[0], mod, defs)
+                if fn is not None and id(fn) not in seen:
+                    seen.add(id(fn))
+                    yield fn, node
+
+
+def _local_names(fn) -> set:
+    names = set()
+    a = fn.args
+    for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+        names.add(arg.arg)
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, ast.Store):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.add(node.name)
+            elif isinstance(node, ast.comprehension):
+                for t in ast.walk(node.target):
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+    return names
+
+
+def _param_names(fn) -> set:
+    a = fn.args
+    names = {arg.arg for arg in (a.posonlyargs + a.args + a.kwonlyargs)}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+class JitPurityPass(LintPass):
+    name = "jit-purity"
+    codes = ("RA101", "RA102", "RA103")
+
+    def run(self, mod: Module) -> List[Finding]:
+        out: List[Finding] = []
+        for fn, _reason in _collect_jitted(mod):
+            label = getattr(fn, "name", "<lambda>")
+            locals_ = _local_names(fn)
+            params = _param_names(fn)
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            for stmt in body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.Global, ast.Nonlocal)):
+                        out.append(mod.finding(
+                            "RA101", self.name, node,
+                            f"'{type(node).__name__.lower()}' statement in "
+                            f"jitted function '{label}': rebinding "
+                            f"enclosing-scope state is invisible to the "
+                            f"tracer and breaks purity"))
+                    elif isinstance(node, (ast.Subscript, ast.Attribute)) \
+                            and isinstance(node.ctx, (ast.Store, ast.Del)):
+                        base = node.value
+                        while isinstance(base, (ast.Subscript,
+                                                ast.Attribute)):
+                            base = base.value
+                        if isinstance(base, ast.Name) \
+                                and base.id not in locals_:
+                            out.append(mod.finding(
+                                "RA102", self.name, node,
+                                f"jitted function '{label}' writes into "
+                                f"enclosing-scope object '{base.id}': the "
+                                f"side effect runs once at trace time, "
+                                f"not per call"))
+                    elif isinstance(node, ast.Call) \
+                            and isinstance(node.func, ast.Attribute) \
+                            and node.func.attr in MUTATORS:
+                        base = node.func.value
+                        while isinstance(base, (ast.Subscript,
+                                                ast.Attribute)):
+                            base = base.value
+                        if isinstance(base, ast.Name) \
+                                and base.id not in locals_:
+                            out.append(mod.finding(
+                                "RA102", self.name, node,
+                                f"jitted function '{label}' mutates "
+                                f"enclosing-scope object '{base.id}' via "
+                                f".{node.func.attr}(): side effect runs at "
+                                f"trace time only"))
+                    elif isinstance(node, (ast.If, ast.While)):
+                        out.extend(self._traced_branch(
+                            mod, node, label, params))
+        return out
+
+    def _traced_branch(self, mod: Module, node, label: str,
+                       params: set) -> List[Finding]:
+        out = []
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Name) and sub.id in params \
+                    and isinstance(sub.ctx, ast.Load):
+                parent = parent_of(sub)
+                if isinstance(parent, ast.Attribute) \
+                        and parent.attr in STATIC_ATTRS:
+                    continue
+                if isinstance(parent, ast.Call) and parent.func is sub:
+                    continue
+                out.append(mod.finding(
+                    "RA103", self.name, node,
+                    f"Python '{'if' if isinstance(node, ast.If) else 'while'}'"
+                    f" in jitted function '{label}' branches on traced "
+                    f"parameter '{sub.id}': use jnp.where / lax.cond, or "
+                    f"mark it static"))
+                break
+        return out
+
+
+# --------------------------------------------------------------------------
+# bitwise-reference (RA201)
+# --------------------------------------------------------------------------
+
+class BitwiseReferencePass(LintPass):
+    name = "bitwise-reference"
+    codes = ("RA201",)
+
+    def __init__(self, decision_globs: Sequence[str] = DECISION_PATH_GLOBS):
+        self.decision_globs = tuple(decision_globs)
+
+    def run(self, mod: Module) -> List[Finding]:
+        if not any(fnmatch.fnmatch(mod.path, g) for g in self.decision_globs):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            dn = dotted_name(node.func, mod.aliases)
+            if dn is None or not dn.startswith("jax.numpy."):
+                continue
+            attr = node.func.attr
+            if attr in DRIFT_FUNCS:
+                out.append(mod.finding(
+                    "RA201", self.name, node,
+                    f"jnp.{attr} in a decision-path module: XLA lowering "
+                    f"is not pinned bit-identical to the NumPy oracle "
+                    f"(host-side / exact-integer use must be baselined "
+                    f"with a justification)"))
+            elif attr == "einsum":
+                operands = [a for a in node.args
+                            if not (isinstance(a, ast.Constant)
+                                    and isinstance(a.value, str))]
+                if len(operands) >= 3:
+                    out.append(mod.finding(
+                        "RA201", self.name, node,
+                        "3-operand jnp.einsum in a decision-path module: "
+                        "XLA contraction order differs from NumPy's "
+                        "pairwise reduction (PR 3 lowering gotcha)"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# determinism (RA301-RA304)
+# --------------------------------------------------------------------------
+
+def _is_set_expr(node: ast.AST) -> bool:
+    return (isinstance(node, (ast.Set, ast.SetComp))
+            or (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "set"))
+
+
+class DeterminismPass(LintPass):
+    name = "determinism"
+    codes = ("RA301", "RA302", "RA303", "RA304")
+
+    def run(self, mod: Module) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_call(mod, node))
+            elif isinstance(node, ast.For):
+                if _is_set_expr(node.iter):
+                    out.append(self._set_finding(mod, node.iter))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for comp in node.generators:
+                    if _is_set_expr(comp.iter):
+                        out.append(self._set_finding(mod, comp.iter))
+        return out
+
+    def _set_finding(self, mod: Module, node: ast.AST) -> Finding:
+        return mod.finding(
+            "RA302", self.name, node,
+            "iteration over a set: order follows hash seeding, not a "
+            "deterministic key — wrap in sorted(...) before iterating")
+
+    def _check_call(self, mod: Module, node: ast.Call) -> List[Finding]:
+        out: List[Finding] = []
+        dn = dotted_name(node.func, mod.aliases)
+        # RA301: unstable index sort (host-side; jnp.argsort is RA201's
+        # domain in decision-path modules).
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "argsort" \
+                and not (dn or "").startswith("jax.numpy."):
+            kinds = [kw.value.value for kw in node.keywords
+                     if kw.arg == "kind"
+                     and isinstance(kw.value, ast.Constant)]
+            if not any(k in ("stable", "mergesort") for k in kinds):
+                out.append(mod.finding(
+                    "RA301", self.name, node,
+                    "argsort without kind=\"stable\": default quicksort "
+                    "permutes ties nondeterministically across NumPy "
+                    "builds — tie order is a scheduling decision here"))
+        # RA302: list(set(...)) / tuple(set(...)) / enumerate(set(...)).
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in {"list", "tuple", "enumerate", "iter"} \
+                and node.args and _is_set_expr(node.args[0]):
+            out.append(self._set_finding(mod, node.args[0]))
+        # RA303: global-state np.random.
+        if dn and dn.startswith("numpy.random."):
+            fn_name = dn.rsplit(".", 1)[1]
+            if fn_name in GLOBAL_NP_RANDOM:
+                out.append(mod.finding(
+                    "RA303", self.name, node,
+                    f"np.random.{fn_name} uses the hidden global RNG: "
+                    f"thread an explicit seeded Generator/RandomState "
+                    f"through the caller instead"))
+            # RA304: hardcoded seed in a constructed RNG.
+            if fn_name in {"RandomState", "default_rng"} and node.args \
+                    and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, (int, float)):
+                out.append(mod.finding(
+                    "RA304", self.name, node,
+                    f"np.random.{fn_name}({node.args[0].value!r}) hardcodes "
+                    f"the seed in library code: accept a seed parameter so "
+                    f"runs are reproducible *and* controllable"))
+        return out
+
+
+# --------------------------------------------------------------------------
+# recompile-hazard (RA401-RA403)
+# --------------------------------------------------------------------------
+
+class RecompileHazardPass(LintPass):
+    name = "recompile-hazard"
+    codes = ("RA401", "RA402", "RA403")
+
+    def run(self, mod: Module) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            # RA401/RA403: jax.jit / jax.vmap construction sites.
+            if _is_jit_wrapper(node.func, mod.aliases) \
+                    and dotted_name(node.func, mod.aliases) in JIT_WRAPPERS:
+                loop = next((a for a in ancestors(node)
+                             if isinstance(a, (ast.For, ast.While))), None)
+                if loop is not None:
+                    out.append(mod.finding(
+                        "RA401", self.name, node,
+                        "jax.jit/vmap constructed inside a loop: every "
+                        "iteration builds a fresh traced callable and "
+                        "recompiles — hoist the jitted function out of "
+                        "the loop (memoize like batch_solver._KERNELS)"))
+                parent = parent_of(node)
+                if isinstance(parent, ast.Call) and parent.func is node:
+                    out.append(mod.finding(
+                        "RA403", self.name, node,
+                        "jax.jit(f)(...) invoked inline: the compiled "
+                        "artifact is dropped after one call — bind the "
+                        "jitted callable once and reuse it"))
+            # RA402: kernel dispatch without padding-bucket quantization.
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in KERNEL_GETTERS:
+                fn = next((a for a in ancestors(node)
+                           if isinstance(a, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef))), None)
+                if fn is not None and not self._calls_pad_helper(fn):
+                    out.append(mod.finding(
+                        "RA402", self.name, node,
+                        f"'{node.func.id}' called without quantizing the "
+                        f"job axis through bucket_size(): unpadded shapes "
+                        f"trigger one XLA compile per distinct queue "
+                        f"length"))
+        return out
+
+    @staticmethod
+    def _calls_pad_helper(fn) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = None
+                if isinstance(node.func, ast.Name):
+                    name = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    name = node.func.attr
+                if name in PAD_HELPERS:
+                    return True
+        return False
+
+
+def default_passes() -> List[LintPass]:
+    return [JitPurityPass(), BitwiseReferencePass(), DeterminismPass(),
+            RecompileHazardPass()]
+
+
+PASS_DOC = {
+    "jit-purity": "RA101 global/nonlocal, RA102 enclosing-scope mutation, "
+                  "RA103 Python branch on traced parameter",
+    "bitwise-reference": "RA201 XLA-vs-NumPy drift hazard in a "
+                         "decision-path (repro/core) module",
+    "determinism": "RA301 unstable argsort, RA302 set iteration, "
+                   "RA303 global np.random, RA304 hardcoded RNG seed",
+    "recompile-hazard": "RA401 jit-in-loop, RA402 kernel dispatch without "
+                        "bucket_size padding, RA403 inline jax.jit(f)(x)",
+}

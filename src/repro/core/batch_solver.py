@@ -424,4 +424,12 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
         alloc = {ps.keys[m]: int(counts[m]) for m in ms}
         results[j] = Candidate(alloc, cost, payoff,
                                float(x_sorted[j, jmax]))
+    from repro.analysis import invariants as _inv
+    if _inv.sanitize_enabled():
+        for job, cand in zip(jobs, results):
+            if cand is not None:
+                _inv.check_candidate(job.job_id, job.n_workers,
+                                     cand.alloc, cand.payoff, cand.cost,
+                                     forced=force,
+                                     context="(find_alloc_batch)")
     return results

@@ -236,11 +236,32 @@ def _scan_standalone(queue: List[Job], avail0: np.ndarray,
                                force=False) for j in queue]
 
 
+def _sanitize_selection(sel: Dict[int, "Candidate"], queue: List[Job],
+                        ps: PriceState, avail0: np.ndarray) -> None:
+    """Sanitizer hook: gang atomicity + dual feasibility per selected
+    candidate, joint capacity across the selection (non-forced path, so
+    every payoff must clear the mu_j > 0 admission gate)."""
+    from repro.analysis import invariants as _inv
+    by_id = {j.job_id: j for j in queue}
+    for job_id, cand in sel.items():
+        job = by_id.get(job_id)
+        if job is None:
+            _inv.violate("gang-atomicity",
+                         "selection references a job not in the queue",
+                         job=job_id)
+        _inv.check_candidate(job_id, job.n_workers, cand.alloc,
+                             cand.payoff, cand.cost,
+                             context="(dp_allocation)")
+    free_map = {k: float(avail0[m]) for k, m in ps.key_index.items()}
+    _inv.check_selection(sel, free_map, "(dp_allocation)")
+
+
 def dp_allocation(queue: List[Job],
                   free: Optional[Dict[Tuple[int, str], int]],
                   ps: PriceState, now: float, utility: UtilityFn,
                   max_exact: int = 64,
-                  solver: Optional[str] = None) -> Dict[int, Candidate]:
+                  solver: Optional[str] = None,
+                  sanitize: bool = None) -> Dict[int, Candidate]:
     """Select jobs + allocations maximizing total payoff (Algorithm 2).
 
     Exact select/skip DP with memoization for queues up to ``max_exact``;
@@ -253,9 +274,12 @@ def dp_allocation(queue: List[Job],
     module docstring); the greedy commit loop always replays winners
     through the NumPy kernel in the reference order, so decisions are
     backend-independent."""
+    from repro.analysis import invariants as _inv
+    _san = _inv.sanitize_enabled(sanitize)
     free_is_ps = free is None
     if len(queue) > max_exact:
         avail0 = ps.free_arr.copy() if free_is_ps else ps.free_to_arr(free)
+        avail_init = avail0.copy() if _san else None
         gamma0 = ps.gamma_arr.copy()
         # greedy pass: highest standalone payoff first
         cands = _scan_standalone(queue, avail0, gamma0, ps, now, utility,
@@ -277,6 +301,8 @@ def dp_allocation(queue: List[Job],
                     m = ps.key_index[k]
                     avail[m] -= v
                     gamma[m] += v
+        if _san:
+            _sanitize_selection(chosen, queue, ps, avail_init)
         return chosen
 
     memo: Dict = {}
@@ -322,4 +348,8 @@ def dp_allocation(queue: List[Job],
         return memo[k]
 
     _, sel = rec(0, {})
+    if _san:
+        avail_chk = (ps.free_arr.copy() if free_is_ps
+                     else ps.free_to_arr(free))
+        _sanitize_selection(sel, queue, ps, avail_chk)
     return sel

@@ -41,6 +41,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.analysis import invariants as _inv
 from repro.core.types import Cluster, Job
 from repro.core.utility import UtilityFn, effective_throughput
 
@@ -57,6 +58,11 @@ class _GammaDict(dict):
         if idx is not None:
             self._ps.gamma_arr[idx] = value
             self._ps._touch("gamma")
+        if not self._ps._in_managed_op:
+            # direct gamma writes replay external occupancy; the
+            # sanitizer's allocated+free==capacity conservation check
+            # only holds while commit/release drive all mutations
+            self._ps._conserved = False
 
     def __setitem__(self, key, value):
         super().__setitem__(key, value)
@@ -100,15 +106,22 @@ class _GammaDict(dict):
 class PriceState:
     def __init__(self, cluster: Cluster, jobs: List[Job], horizon: float,
                  utility: UtilityFn = effective_throughput,
-                 now: float = 0.0):
+                 now: float = 0.0, sanitize: bool = None):
         self.cluster = cluster
         self.utility = utility
         self.horizon = horizon
+        # resolved once (env REPRO_SANITIZE or explicit flag); disabled
+        # mode costs one attribute test per commit/release
+        self._sanitize = _inv.sanitize_enabled(sanitize)
+        self._in_managed_op = False
+        self._conserved = True
         self.u_max: Dict[str, float] = {}
         self.u_min: Dict[str, float] = {}
         self._compute_bounds(jobs, now)
         self._build_arrays()
         self.gamma: Dict[Tuple[int, str], int] = _GammaDict(self)
+        if self._sanitize:
+            _inv.check_price_state(self, "after __init__")
 
     # ---- Eqs. 6-7 ------------------------------------------------------
     def _compute_bounds(self, jobs: List[Job], now: float) -> None:
@@ -225,9 +238,16 @@ class PriceState:
         self.umin_arr[:] = [self.u_min[r] for (_, r) in self.keys]
         self.umax_arr[:] = [self.u_max[r] for (_, r) in self.keys]
         np.divide(self.umax_arr, self.umin_arr, out=self.q_arr)
-        self.gamma.clear()                  # zeroes gamma_arr in place
+        self._in_managed_op = True
+        try:
+            self.gamma.clear()              # zeroes gamma_arr in place
+        finally:
+            self._in_managed_op = False
         self.free_arr[:] = self.cap_arr
+        self._conserved = True              # clean slate: gamma+free==cap
         self._touch("umin", "umax", "q", "free")
+        if self._sanitize:
+            _inv.check_price_state(self, "after refresh")
 
     def free_to_arr(self, free: Dict[Tuple[int, str], int]) -> np.ndarray:
         """Project a free-count dict onto the key axis.  Compatibility
@@ -259,21 +279,48 @@ class PriceState:
                             for r in self.u_max])
 
     def commit(self, alloc: Dict[Tuple[int, str], int]) -> None:
-        for key, c in alloc.items():
-            self.gamma[key] = self.gamma.get(key, 0) + c
-            m = self.key_index.get(key)
-            if m is not None:
-                self.free_arr[m] -= c
+        if self._sanitize:
+            _inv.check_commit_amounts(self, alloc, "commit")
+        self._in_managed_op = True
+        try:
+            for key, c in alloc.items():
+                self.gamma[key] = self.gamma.get(key, 0) + c
+                m = self.key_index.get(key)
+                if m is not None:
+                    self.free_arr[m] -= c
+        finally:
+            self._in_managed_op = False
         self._touch("free")
+        if self._sanitize:
+            _inv.check_price_state(self, "after commit")
 
     def release(self, alloc: Dict[Tuple[int, str], int]) -> None:
-        for key, c in alloc.items():
-            self.gamma[key] = max(0, self.gamma.get(key, 0) - c)
-            m = self.key_index.get(key)
-            if m is not None:
-                self.free_arr[m] = min(self.cap_arr[m],
-                                       self.free_arr[m] + c)
+        if self._sanitize:
+            _inv.check_commit_amounts(self, alloc, "release")
+            if self._conserved:
+                # clamping would silently swallow a mismatched release;
+                # while conservation holds, releasing more than was
+                # committed is an accounting bug, not a recovery path
+                for key, c in alloc.items():
+                    if c > self.gamma.get(key, 0):
+                        _inv.violate(
+                            "conservation",
+                            "release exceeds committed occupancy",
+                            key=key, release=c,
+                            committed=self.gamma.get(key, 0))
+        self._in_managed_op = True
+        try:
+            for key, c in alloc.items():
+                self.gamma[key] = max(0, self.gamma.get(key, 0) - c)
+                m = self.key_index.get(key)
+                if m is not None:
+                    self.free_arr[m] = min(self.cap_arr[m],
+                                           self.free_arr[m] + c)
+        finally:
+            self._in_managed_op = False
         self._touch("free")
+        if self._sanitize:
+            _inv.check_price_state(self, "after release")
 
     def snapshot(self) -> Tuple:
         return tuple(sorted((k, v) for k, v in self.gamma.items() if v))

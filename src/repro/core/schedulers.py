@@ -137,8 +137,11 @@ class GavelScheduler(Scheduler):
             # routes knife-edge sweeps (caps landing exactly on a step*W
             # boundary) to the scalar path — real slack is ≥ one step.
             w_elig = np.where(eligible, w_arr[:, None], 0.0).max(axis=0)
-            # least-served job first -> approximate max-min fairness
-            order = np.argsort(1.0 - frac_left)
+            # least-served job first -> approximate max-min fairness;
+            # ties (equal frac_left) must break by job index, so the
+            # sweep order — and with it capacity drain under scarcity —
+            # replays identically across NumPy builds
+            order = np.argsort(1.0 - frac_left, kind="stable")
             if (cap_left - taken >= step * w_elig + 1e-9).all():
                 np.add.at(Y, (ji_all[doers], best_r[doers]), d[doers])
                 frac_left[doers] -= d[doers]

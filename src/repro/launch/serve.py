@@ -42,12 +42,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for prompt sampling and param init")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    params, _ = init_params(cfg, jax.random.PRNGKey(args.seed))
     eng = ServingEngine(cfg, params, slots=args.slots, max_seq=args.max_seq)
-    rng = np.random.RandomState(0)
+    rng = np.random.RandomState(args.seed)
     reqs = [Request(i, rng.randint(0, cfg.vocab_size, size=4 + i % 5),
                     args.max_new) for i in range(args.requests)]
     t0 = time.time()

@@ -67,6 +67,10 @@ class ServingEngine:
         self.slots = slots
         self.max_seq = max_seq
         self.step = jax.jit(make_serve_step(cfg))
+        # bound once: a fresh jax.jit(lambda ...) per chunk would retrace
+        # and recompile prefill on every loop iteration
+        self.prefill = jax.jit(
+            lambda p, c, t: prefill(p, cfg, c, t))
 
     def run(self, requests: List[Request]) -> List[Request]:
         cfg = self.cfg
@@ -79,9 +83,8 @@ class ServingEngine:
             for j, r in enumerate(chunk):
                 toks[j, plen - len(r.prompt):] = r.prompt
             cache, _ = init_cache(cfg, B, self.max_seq)
-            cache, _ = jax.jit(
-                lambda p, c, t: prefill(p, cfg, c, t))(
-                    self.params, cache, jnp.asarray(toks))
+            cache, _ = self.prefill(self.params, cache,
+                                    jnp.asarray(toks))
             tok = jnp.asarray(toks[:, -1])
             outs = []
             max_new = max(r.max_new for r in chunk)

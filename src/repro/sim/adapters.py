@@ -91,7 +91,8 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                     n_copies: Optional[int] = None,
                     scheduler=None, sync_overhead: float = 5.0,
                     fast_forward: bool = True,
-                    solver: Optional[str] = None) -> SimResult:
+                    solver: Optional[str] = None,
+                    sanitize: bool = None) -> SimResult:
     """Vectorized, event-aware HadarE simulation (see module docstring).
     ``jobs`` are parents; metrics are reported at parent granularity.
     ``solver`` picks the Hadar core's pricing backend ("jax" | "numpy" |
@@ -102,6 +103,10 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
 
     sched = scheduler or HadarScheduler()
     _apply_solver(sched, solver)
+    from repro.analysis import invariants as _inv
+    from repro.sim.engine import _cap_by_key
+    _san = _inv.sanitize_enabled(sanitize)
+    cap = _cap_by_key(cluster) if _san else None
     parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     for p in parents:
         p.done_iters = 0.0
@@ -171,6 +176,11 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
             rw[pi, ci] = c.bottleneck_rate(new) * alloc_size(new)
             wmat[pi, ci] = alloc_size(new)
             busy_nodes.update(alloc_nodes(new))
+        if _san:
+            _inv.check_cluster_allocs(live, cap, t, "hadare")
+            for i in np.nonzero(registered)[0]:
+                _inv.check_sibling_nodes(parents[i].job_id,
+                                         copy_objs[i], t)
 
         # --- aggregation and re-split as (parent × copy) array ops -----
         eff = np.clip(round_len - pen - sync_overhead, 0.0, None)
@@ -209,6 +219,15 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
             for ci, c in enumerate(copy_objs[i]):
                 c.quota = float(quota[i, ci])
 
+        if _san:
+            for i, p in enumerate(parents):
+                if float(done[i]) < -1e-9 \
+                        or float(done[i]) > float(total[i]) + 1e-6:
+                    _inv.violate("progress-bound",
+                                 "parent done_iters outside "
+                                 "[0, total_iters]", engine="hadare",
+                                 t=t, job=p.job_id, done=float(done[i]),
+                                 total=float(total[i]))
         n_active = int((((total - done) > 1e-9) & (arrivals <= t)).sum())
         n_running = int(allocated.any(axis=1).sum())
         rounds.append(RoundRecord(
@@ -219,6 +238,9 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        if _san:
+            _inv.check_utilization(rounds[-1].gru, rounds[-1].cru, t,
+                                   "hadare")
         t += round_len
         rnd += 1
 

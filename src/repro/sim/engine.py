@@ -42,12 +42,28 @@ import math
 import time
 from typing import Dict, List, Optional, Set
 
+from repro.analysis import invariants as _inv
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
 from repro.sim.events import EventKind, EventQueue
 from repro.sim.metrics import (EventSimResult, MetricsRecorder, RoundRecord,
                                SimResult)
 
 RESTART_PENALTY = 10.0  # seconds per allocation change (paper §IV)
+
+
+def _cap_by_key(cluster: Cluster) -> Dict:
+    return {(n.node_id, r): int(c)
+            for n in cluster.nodes for r, c in n.gpus.items()}
+
+
+def _check_state(jobs: List[Job], cap, t: float, engine: str,
+                 prev_done: Dict[int, float]) -> None:
+    """Sanitizer hook run once per scheduling decision: live-allocation
+    gang atomicity + capacity conservation, progress bounds."""
+    _inv.check_cluster_allocs(jobs, cap, t, engine)
+    for j in jobs:
+        _inv.check_progress(j, t, engine, prev_done.get(j.job_id))
+        prev_done[j.job_id] = float(j.done_iters)
 
 
 def _alloc_equal(a: Optional[Alloc], b: Optional[Alloc]) -> bool:
@@ -82,12 +98,18 @@ def _apply_solver(scheduler, solver: Optional[str]) -> None:
 def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_rounds: int = 20000,
                     restart_penalty: float = RESTART_PENALTY,
-                    solver: Optional[str] = None) -> SimResult:
+                    solver: Optional[str] = None,
+                    sanitize: bool = None) -> SimResult:
     """Round-based simulation; byte-identical to the seed round loop on
     dense traces, O(events) on sparse ones via steady fast-forward.
     ``solver`` ("jax" | "numpy" | "auto") overrides the scheduler's
-    pricing backend; decisions are backend-independent."""
+    pricing backend; decisions are backend-independent.  ``sanitize``
+    (default: the ``REPRO_SANITIZE`` env flag) asserts the paper's
+    invariants after every scheduling decision."""
     _apply_solver(scheduler, solver)
+    _san = _inv.sanitize_enabled(sanitize)
+    cap = _cap_by_key(cluster) if _san else None
+    prev_done: Dict[int, float] = {}
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(jobs)
     total_gpus = cluster.total_gpus()
@@ -156,6 +178,10 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        if _san:
+            _check_state(jobs, cap, t, "rounds", prev_done)
+            _inv.check_utilization(rounds[-1].gru, rounds[-1].cru, t,
+                                   "rounds")
         t += round_len
         rnd += 1
 
@@ -215,7 +241,8 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
 def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_events: int = 500000,
                     restart_penalty: float = RESTART_PENALTY,
-                    solver: Optional[str] = None) -> EventSimResult:
+                    solver: Optional[str] = None,
+                    sanitize: bool = None) -> EventSimResult:
     """Continuous-time simulation: t jumps to the next event.
 
     ``round_len`` keeps two roles: the scheduling quantum for schedulers
@@ -230,14 +257,18 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     state rebuild.
     """
     _apply_solver(scheduler, solver)
+    _san = _inv.sanitize_enabled(sanitize)
+    cap = _cap_by_key(cluster) if _san else None
+    prev_done: Dict[int, float] = {}
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(jobs)
     by_id = {j.job_id: j for j in jobs}
     stable = getattr(scheduler, "stable_when_idle", False)
-    q = EventQueue()
+    q = EventQueue(sanitize=_san)
     for j in jobs:
         q.push_arrival(j.arrival, j.job_id)
-    recorder = MetricsRecorder(cluster.total_gpus(), len(cluster.nodes))
+    recorder = MetricsRecorder(cluster.total_gpus(), len(cluster.nodes),
+                               sanitize=_san)
     pen_until: Dict[int, float] = {j.job_id: 0.0 for j in jobs}
     t = 0.0
     n_events = 0
@@ -280,6 +311,8 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
         if not batch:
             break
         t_new = batch[0].time
+        if _san:
+            _inv.check_monotonic(t_new, t, "events")
         _accrue_and_record(t, t_new)
         t = t_new
         open_changed = 0
@@ -331,6 +364,9 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
             if rate * w > 0:
                 t_fin = t + pen + j.remaining_iters / (rate * w)
                 q.push_completion(t_fin, j.job_id)
+
+        if _san:
+            _check_state(jobs, cap, t, "events", prev_done)
 
         # re-schedule quantum: always for rotating schedulers; for stable
         # ones only while some active job is still unallocated (the same

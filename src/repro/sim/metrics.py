@@ -121,17 +121,19 @@ class EventSimResult(SimResult):
 class MetricsRecorder:
     """Incremental interval recorder for the event engine."""
 
-    def __init__(self, total_gpus: int, n_nodes: int):
+    def __init__(self, total_gpus: int, n_nodes: int,
+                 sanitize: bool = False):
         self.total_gpus = max(1, total_gpus)
         self.n_nodes = max(1, n_nodes)
         self.records: List[IntervalRecord] = []
+        self._sanitize = bool(sanitize)
 
     def close_interval(self, t0: float, dt: float, busy_gpu_time: float,
                        busy_nodes: Set[int], running: int, waiting: int,
                        changed: int, sched_seconds: float) -> None:
         if dt <= 0.0:
             return
-        self.records.append(IntervalRecord(
+        rec = IntervalRecord(
             t=t0,
             gru=busy_gpu_time / (self.total_gpus * dt),
             cru=len(busy_nodes) / self.n_nodes,
@@ -139,7 +141,14 @@ class MetricsRecorder:
             waiting=waiting,
             changed=changed,
             sched_seconds=sched_seconds,
-            dt=dt))
+            dt=dt)
+        if self._sanitize:
+            from repro.analysis import invariants as _inv
+            _inv.check_utilization(rec.gru, rec.cru, t0, "events")
+            if self.records:
+                _inv.check_monotonic(t0, self.records[-1].t, "events",
+                                     "interval start")
+        self.records.append(rec)
 
     def result(self, name: str, jobs: List[Job], total_seconds: float,
                n_events: int, sched_calls: int) -> EventSimResult:

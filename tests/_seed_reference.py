@@ -326,7 +326,8 @@ def allocation_matrix(jobs: List[Job], cluster: Cluster,
     norm = norm / np.maximum(norm.max(axis=1, keepdims=True), 1e-9)
     for _ in range(iters):
         progress = False
-        order = np.argsort(1.0 - frac_left)
+        # stable: ties in frac_left break by job index (matches src)
+        order = np.argsort(1.0 - frac_left, kind="stable")
         for ji in order:
             if frac_left[ji] <= 1e-9:
                 continue

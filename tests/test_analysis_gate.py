@@ -1,0 +1,45 @@
+"""Tier-1 gate: the shipped tree must lint clean.
+
+``python -m repro.analysis src/`` exiting 0 is an acceptance criterion
+of the analysis subsystem; running it as a pytest gate makes every
+future PR pass through the four passes (jit-purity, bitwise-reference,
+determinism, recompile-hazard).  New legitimate findings belong in
+``analysis_baseline.json`` with a written justification — and stale
+suppressions must be pruned, so the baseline never rots into a
+blanket mute."""
+from pathlib import Path
+
+from repro.analysis.engine import lint_paths
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _report():
+    return lint_paths([str(REPO / "src")], root=str(REPO),
+                      baseline_path=str(REPO / "analysis_baseline.json"))
+
+
+def test_src_tree_lints_clean():
+    report = _report()
+    assert not report.parse_errors, [f.render()
+                                     for f in report.parse_errors]
+    assert not report.findings, "non-baselined findings:\n" + "\n".join(
+        f.render() for f in report.findings)
+
+
+def test_baseline_has_no_stale_suppressions():
+    report = _report()
+    assert not report.stale, (
+        "baseline entries that no longer match any finding "
+        "(prune them):\n" + "\n".join(
+            f"{e['code']} {e['path']} :: {e['line_text']}"
+            for e in report.stale))
+
+
+def test_baseline_entries_carry_justifications():
+    import json
+    entries = json.loads(
+        (REPO / "analysis_baseline.json").read_text())["suppressions"]
+    for e in entries:
+        assert e.get("justification", "").strip() and \
+            not e["justification"].startswith("TODO"), e

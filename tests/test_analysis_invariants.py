@@ -1,0 +1,294 @@
+"""Runtime sanitizer (repro.analysis.invariants): negative tests proving
+each invariant fires on a violation, no-op-by-default checks, and
+property tests replaying random fig5-style traces through both engines
+under REPRO_SANITIZE=1."""
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.analysis.invariants import (InvariantViolation, check_candidate,
+                                       check_cluster_allocs,
+                                       check_monotonic, check_utilization,
+                                       sanitize_enabled)
+from repro.core.dp import Candidate, dp_allocation
+from repro.core.hadar import HadarScheduler
+from repro.core.pricing import PriceState
+from repro.core.schedulers import GavelScheduler
+from repro.core.trace import multi_cluster, philly_trace, simulation_cluster
+from repro.core.types import Cluster, Job, Node
+from repro.core.utility import effective_throughput
+from repro.sim.adapters import simulate_hadare
+from repro.sim.engine import simulate_events, simulate_rounds
+from repro.sim.events import EventQueue
+from repro.sim.metrics import MetricsRecorder
+
+
+class _sanitize_env:
+    """Set REPRO_SANITIZE=1 for a block (usable inside @given bodies,
+    where pytest fixtures are unavailable)."""
+
+    def __enter__(self):
+        self._old = os.environ.get("REPRO_SANITIZE")
+        os.environ["REPRO_SANITIZE"] = "1"
+
+    def __exit__(self, *exc):
+        if self._old is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = self._old
+
+
+def _mini():
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=6, seed=3, types=cluster.gpu_types)
+    return cluster, jobs
+
+
+# ---------------------------------------------------------------------------
+# flag resolution / no-op by default
+# ---------------------------------------------------------------------------
+
+def test_sanitize_flag_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    assert sanitize_enabled(True)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    assert not sanitize_enabled(False)   # explicit arg beats the env
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+def test_sanitizer_noop_by_default(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    assert ps._sanitize is False
+    # a blatant over-commit passes silently when disabled
+    key = ps.keys[0]
+    ps.commit({key: int(ps.cap_arr[0]) + 5})
+    assert ps.free_arr[0] < 0
+
+
+# ---------------------------------------------------------------------------
+# PriceState invariants
+# ---------------------------------------------------------------------------
+
+def test_overcommit_raises_free_range():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    key = ps.keys[0]
+    with pytest.raises(InvariantViolation) as ei:
+        ps.commit({key: int(ps.cap_arr[0]) + 5})
+    assert ei.value.invariant == "free-range"
+    assert "key" in ei.value.snapshot
+
+
+def test_mismatched_release_raises_conservation():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    key = ps.keys[0]
+    ps.commit({key: 1})
+    with pytest.raises(InvariantViolation) as ei:
+        ps.release({key: 3})         # releasing more than committed
+    assert ei.value.invariant == "conservation"
+
+
+def test_commit_release_cycle_stays_conserved():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    key = ps.keys[0]
+    ps.commit({key: 2})
+    ps.release({key: 2})
+    ps.refresh(jobs, now=0.0)
+    assert ps._conserved
+    np.testing.assert_array_equal(ps.free_arr, ps.cap_arr)
+
+
+def test_direct_gamma_write_disables_conservation_not_sanity():
+    # replaying external occupancy via the gamma dict is a legitimate
+    # API: conservation checking stops, range checking continues
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    ps.gamma[ps.keys[0]] = 2         # free_arr untouched on purpose
+    assert not ps._conserved
+    ps.commit({ps.keys[1]: 1})       # no false conservation alarm
+
+
+def test_negative_commit_raises():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    with pytest.raises(InvariantViolation):
+        ps.commit({ps.keys[0]: -1})
+
+
+# ---------------------------------------------------------------------------
+# candidate / selection invariants
+# ---------------------------------------------------------------------------
+
+def test_partial_gang_candidate_raises():
+    with pytest.raises(InvariantViolation) as ei:
+        check_candidate(7, 4, {(0, "v100"): 3}, payoff=1.0, cost=0.5)
+    assert ei.value.invariant == "gang-atomicity"
+
+
+def test_nonpositive_payoff_candidate_raises_unless_forced():
+    alloc = {(0, "v100"): 2}
+    with pytest.raises(InvariantViolation) as ei:
+        check_candidate(7, 2, alloc, payoff=0.0, cost=0.5)
+    assert ei.value.invariant == "payoff-positive"
+    check_candidate(7, 2, alloc, payoff=0.0, cost=0.5, forced=True)
+
+
+def test_dp_allocation_sanitized_selection_passes():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0)
+    sel = dp_allocation(jobs, cluster.free_map({}), ps, 0.0,
+                        effective_throughput, sanitize=True)
+    assert sel                        # something scheduled, checks passed
+    # greedy path too
+    sel2 = dp_allocation(jobs, cluster.free_map({}), ps, 0.0,
+                         effective_throughput, max_exact=2, sanitize=True)
+    assert sel2
+
+
+# ---------------------------------------------------------------------------
+# engine-level invariants
+# ---------------------------------------------------------------------------
+
+class _OversubscribingScheduler:
+    """Malicious baseline: allocates the same devices to every job."""
+    name = "oversub"
+    preemptive = True
+    stable_when_idle = False
+
+    def schedule(self, now, round_len, jobs, cluster):
+        node = cluster.nodes[0]
+        gpu = next(iter(node.gpus))
+        return {j.job_id: {(node.node_id, gpu): j.n_workers}
+                for j in jobs if not j.is_done() and j.arrival <= now}
+
+
+class _PartialGangScheduler:
+    """Gives every job one device regardless of its gang size."""
+    name = "partial"
+    preemptive = True
+    stable_when_idle = False
+
+    def schedule(self, now, round_len, jobs, cluster):
+        out = {}
+        for i, j in enumerate(jobs):
+            if j.is_done() or j.arrival > now:
+                continue
+            node = cluster.nodes[i % len(cluster.nodes)]
+            gpu = next(iter(node.gpus))
+            out[j.job_id] = {(node.node_id, gpu): 1}
+        return out
+
+
+def test_engine_catches_oversubscription():
+    cluster, jobs = _mini()
+    with pytest.raises(InvariantViolation) as ei:
+        simulate_rounds(_OversubscribingScheduler(), jobs, cluster,
+                        max_rounds=3, sanitize=True)
+    assert ei.value.invariant == "conservation"
+    with pytest.raises(InvariantViolation):
+        simulate_events(_OversubscribingScheduler(), jobs, cluster,
+                        max_events=50, sanitize=True)
+
+
+def test_engine_catches_partial_gang():
+    cluster = simulation_cluster()
+    jobs = [j for j in philly_trace(n_jobs=6, seed=3,
+                                    types=cluster.gpu_types)
+            if j.n_workers > 1]
+    assert jobs, "trace must contain a multi-worker gang"
+    with pytest.raises(InvariantViolation) as ei:
+        simulate_rounds(_PartialGangScheduler(), jobs, cluster,
+                        max_rounds=3, sanitize=True)
+    assert ei.value.invariant == "gang-atomicity"
+
+
+def test_cluster_alloc_check_direct():
+    node = Node(0, {"v100": 2})
+    cluster = Cluster([node])
+    job = Job(job_id=1, arrival=0.0, n_workers=4, epochs=1,
+              iters_per_epoch=100, throughput={"v100": 1.0})
+    job.alloc = {(0, "v100"): 4}
+    with pytest.raises(InvariantViolation) as ei:
+        check_cluster_allocs([job], {(0, "v100"): 2}, 0.0, "test")
+    assert ei.value.invariant == "conservation"
+
+
+def test_metrics_and_queue_invariants():
+    with pytest.raises(InvariantViolation) as ei:
+        check_utilization(1.5, 0.2, 0.0, "test")
+    assert ei.value.invariant == "gru-cru-range"
+    with pytest.raises(InvariantViolation):
+        check_monotonic(1.0, 2.0, "test")
+    rec = MetricsRecorder(4, 2, sanitize=True)
+    with pytest.raises(InvariantViolation):
+        # busy_gpu_time > total_gpus * dt -> GRU > 1
+        rec.close_interval(0.0, 1.0, 10.0, {0}, 1, 0, 0, 0.0)
+    q = EventQueue(sanitize=True)
+    q.push_arrival(1.0, 1)
+    q.push_arrival(5.0, 2)
+    assert q.pop_batch()[0].time == 1.0
+    assert q.pop_batch()[0].time == 5.0   # ascending pops are fine
+    q.push_arrival(2.0, 3)           # time travel: before the last pop
+    with pytest.raises(InvariantViolation):
+        q.pop_batch()
+
+
+def test_invariant_violation_snapshot_contents():
+    cluster, jobs = _mini()
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=True)
+    try:
+        ps.commit({ps.keys[0]: int(ps.cap_arr[0]) + 1})
+    except InvariantViolation as e:
+        assert e.invariant == "free-range"
+        assert e.snapshot["key"] == ps.keys[0]
+        assert "free" in e.snapshot and "cap" in e.snapshot
+        assert "[free-range]" in str(e)
+    else:
+        pytest.fail("expected InvariantViolation")
+
+
+# ---------------------------------------------------------------------------
+# property tests: random fig5 traces through both engines, sanitized
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=40),
+       n=st.integers(min_value=4, max_value=16),
+       multi=st.booleans())
+def test_property_engines_hold_invariants_on_fig5_traces(seed, n, multi):
+    cluster = multi_cluster(seed=seed) if multi else simulation_cluster()
+    with _sanitize_env():
+        for engine in (simulate_rounds, simulate_events):
+            jobs = philly_trace(n_jobs=n, seed=seed,
+                                types=cluster.gpu_types)
+            res = engine(HadarScheduler(), jobs, cluster,
+                         max_rounds=200) if engine is simulate_rounds \
+                else engine(HadarScheduler(), jobs, cluster,
+                            max_events=2000)
+            assert res.rounds is not None
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=30),
+       n=st.integers(min_value=4, max_value=20))
+def test_property_gavel_and_hadare_sanitized(seed, n):
+    cluster = simulation_cluster()
+    with _sanitize_env():
+        jobs = philly_trace(n_jobs=n, seed=seed, types=cluster.gpu_types)
+        simulate_rounds(GavelScheduler(), jobs, cluster, max_rounds=150)
+        jobs2 = philly_trace(n_jobs=min(n, 10), seed=seed,
+                             types=cluster.gpu_types)
+        simulate_hadare(jobs2, cluster, max_rounds=150)

@@ -1,0 +1,320 @@
+"""Fixture tests for the repro.analysis lint passes: one "bad snippet"
+per pass proving it fires, plus clean-counterpart snippets proving the
+conservative heuristics stay quiet, baseline round-tripping, and the
+CLI exit-code contract."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_source
+from repro.analysis.baseline import (load_baseline, save_baseline,
+                                     split_by_baseline)
+from repro.analysis.engine import lint_paths
+
+CORE = "src/repro/core/snippet.py"       # path inside the decision scope
+OUT = "src/repro/sim/snippet.py"         # path outside it
+
+
+def codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# jit-purity
+# ---------------------------------------------------------------------------
+
+def test_jit_purity_fires_on_global_statement():
+    src = (
+        "import jax\n"
+        "COUNTER = 0\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    global COUNTER\n"
+        "    COUNTER += 1\n"
+        "    return x\n")
+    assert "RA101" in codes(lint_source(src, OUT))
+
+
+def test_jit_purity_fires_on_closure_mutation():
+    src = (
+        "import jax\n"
+        "cache = {}\n"
+        "def g(x):\n"
+        "    cache[0] = x\n"
+        "    return x\n"
+        "h = jax.jit(g)\n")
+    assert "RA102" in codes(lint_source(src, OUT))
+
+
+def test_jit_purity_fires_on_mutator_call():
+    src = (
+        "import jax\n"
+        "log = []\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    log.append(x)\n"
+        "    return x\n")
+    assert "RA102" in codes(lint_source(src, OUT))
+
+
+def test_jit_purity_fires_on_traced_branch():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x > 0:\n"
+        "        return x\n"
+        "    return -x\n")
+    assert "RA103" in codes(lint_source(src, OUT))
+
+
+def test_jit_purity_allows_shape_branch_and_local_state():
+    src = (
+        "import jax\n"
+        "import jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x.shape[0] > 2:\n"
+        "        y = jnp.where(x > 0, x, -x)\n"
+        "    else:\n"
+        "        y = x\n"
+        "    acc = []\n"
+        "    acc.append(y)\n"
+        "    return acc[0]\n")
+    assert lint_source(src, OUT) == []
+
+
+def test_jit_purity_resolves_vmap_nesting_and_partial():
+    src = (
+        "import jax\n"
+        "from functools import partial\n"
+        "state = {}\n"
+        "def inner(x):\n"
+        "    state[1] = x\n"
+        "    return x\n"
+        "k = jax.jit(jax.vmap(inner))\n"
+        "@partial(jax.jit, static_argnums=0)\n"
+        "def outer(n, x):\n"
+        "    state[2] = x\n"
+        "    return x\n")
+    found = codes(lint_source(src, OUT))
+    assert found.count("RA102") == 2
+
+
+def test_jit_purity_skips_unresolvable_targets():
+    # imported / factory-made callables cannot be analyzed — no noise
+    src = (
+        "import jax\n"
+        "from somewhere import mystery\n"
+        "f = jax.jit(mystery)\n"
+        "g = jax.jit(make_step())\n"
+        "def make_step():\n"
+        "    return None\n")
+    assert lint_source(src, OUT) == []
+
+
+# ---------------------------------------------------------------------------
+# bitwise-reference
+# ---------------------------------------------------------------------------
+
+def test_bitwise_reference_fires_in_core_scope():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(a, b, c):\n"
+        "    x = jnp.cumsum(a)\n"
+        "    y = jnp.power(a, b)\n"
+        "    z = jnp.einsum('ij,jk,kl->il', a, b, c)\n"
+        "    return x, y, z\n")
+    found = codes(lint_source(src, CORE))
+    assert found == ["RA201", "RA201", "RA201"]
+
+
+def test_bitwise_reference_scoped_to_decision_path():
+    src = "import jax.numpy as jnp\ndef f(a):\n    return jnp.cumsum(a)\n"
+    assert lint_source(src, OUT) == []
+
+
+def test_bitwise_reference_allows_two_operand_einsum():
+    src = ("import jax.numpy as jnp\n"
+           "def f(a, b):\n"
+           "    return jnp.einsum('ij,jk->ik', a, b)\n")
+    assert lint_source(src, CORE) == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_determinism_fires_on_unstable_argsort():
+    src = "import numpy as np\ndef f(a):\n    return np.argsort(a)\n"
+    assert "RA301" in codes(lint_source(src, OUT))
+
+
+def test_determinism_allows_stable_argsort():
+    src = ("import numpy as np\n"
+           "def f(a):\n"
+           "    return np.argsort(a, kind=\"stable\")\n")
+    assert lint_source(src, OUT) == []
+
+
+def test_determinism_fires_on_set_iteration():
+    src = ("def f(xs):\n"
+           "    out = []\n"
+           "    for x in set(xs):\n"
+           "        out.append(x)\n"
+           "    return out + list({1, 2})\n")
+    found = codes(lint_source(src, OUT))
+    assert found.count("RA302") == 2
+
+
+def test_determinism_allows_sorted_set():
+    src = ("def f(xs):\n"
+           "    return [x for x in sorted(set(xs))]\n")
+    assert lint_source(src, OUT) == []
+
+
+def test_determinism_fires_on_global_np_random():
+    src = ("import numpy as np\n"
+           "def f(n):\n"
+           "    np.random.seed(0)\n"
+           "    return np.random.rand(n)\n")
+    found = codes(lint_source(src, OUT))
+    assert found.count("RA303") == 2
+
+
+def test_determinism_fires_on_hardcoded_seed():
+    src = ("import numpy as np\n"
+           "def f(n):\n"
+           "    rng = np.random.RandomState(0)\n"
+           "    return rng.rand(n)\n")
+    assert "RA304" in codes(lint_source(src, OUT))
+
+
+def test_determinism_allows_threaded_seed():
+    src = ("import numpy as np\n"
+           "def f(n, seed):\n"
+           "    rng = np.random.RandomState(seed)\n"
+           "    return rng.rand(n)\n")
+    assert lint_source(src, OUT) == []
+
+
+# ---------------------------------------------------------------------------
+# recompile-hazard
+# ---------------------------------------------------------------------------
+
+def test_recompile_hazard_fires_on_jit_in_loop():
+    src = (
+        "import jax\n"
+        "def f(fns, x):\n"
+        "    out = []\n"
+        "    for fn in fns:\n"
+        "        out.append(jax.jit(fn)(x))\n"
+        "    return out\n")
+    found = codes(lint_source(src, OUT))
+    assert "RA401" in found and "RA403" in found
+
+
+def test_recompile_hazard_fires_on_unbucketed_dispatch():
+    src = (
+        "def _get_kernel(n):\n"
+        "    return n\n"
+        "def solve(jobs):\n"
+        "    kern = _get_kernel(len(jobs))\n"
+        "    return kern\n")
+    assert "RA402" in codes(lint_source(src, OUT))
+
+
+def test_recompile_hazard_allows_bucketed_dispatch():
+    src = (
+        "def bucket_size(n):\n"
+        "    return 1 << (n - 1).bit_length()\n"
+        "def _get_kernel(n):\n"
+        "    return n\n"
+        "def solve(jobs):\n"
+        "    b = bucket_size(len(jobs))\n"
+        "    return _get_kernel(b)\n")
+    assert lint_source(src, OUT) == []
+
+
+def test_recompile_hazard_allows_module_level_jit():
+    src = ("import jax\n"
+           "def step(x):\n"
+           "    return x\n"
+           "jit_step = jax.jit(step)\n")
+    assert lint_source(src, OUT) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline + engine + CLI
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_suppresses_and_detects_stale(tmp_path):
+    bad = tmp_path / "src" / "repro" / "core" / "mod.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import numpy as np\n"
+                   "def f(a):\n"
+                   "    return np.argsort(a)\n")
+    report = lint_paths([str(tmp_path / "src")], root=str(tmp_path),
+                        baseline_path=None)
+    assert codes(report.findings) == ["RA301"]
+    bl = tmp_path / "analysis_baseline.json"
+    save_baseline(str(bl), report.findings)
+    report2 = lint_paths([str(tmp_path / "src")], root=str(tmp_path),
+                         baseline_path=str(bl))
+    assert report2.clean and len(report2.suppressed) == 1
+    # editing the flagged line invalidates the suppression (stale entry +
+    # the new finding resurfaces)
+    bad.write_text("import numpy as np\n"
+                   "def f(a):\n"
+                   "    return np.argsort(-a)\n")
+    report3 = lint_paths([str(tmp_path / "src")], root=str(tmp_path),
+                         baseline_path=str(bl))
+    assert codes(report3.findings) == ["RA301"]
+    assert len(report3.stale) == 1
+
+
+def test_parse_error_is_reported_not_crashed(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    report = lint_paths([str(bad)], root=str(tmp_path),
+                        baseline_path=None)
+    assert not report.clean
+    assert report.parse_errors[0].code == "RA000"
+
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis"] + args,
+        cwd=cwd, capture_output=True, text=True,
+        env={"PYTHONPATH": str(Path(__file__).resolve().parent.parent
+                               / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import numpy as np\nidx = np.argsort([3, 1])\n")
+    assert _run_cli([str(clean)], tmp_path).returncode == 0
+    r = _run_cli([str(dirty), "--no-baseline"], tmp_path)
+    assert r.returncode == 1
+    assert "RA301" in r.stdout
+    assert _run_cli([str(tmp_path / "missing.py")],
+                    tmp_path).returncode == 2
+
+
+def test_cli_json_format_and_list_passes(tmp_path):
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import numpy as np\nidx = np.argsort([3, 1])\n")
+    r = _run_cli([str(dirty), "--no-baseline", "--format", "json"],
+                 tmp_path)
+    payload = json.loads(r.stdout)
+    assert payload["findings"][0]["code"] == "RA301"
+    r2 = _run_cli(["--list-passes"], tmp_path)
+    assert r2.returncode == 0
+    for name in ("jit-purity", "bitwise-reference", "determinism",
+                 "recompile-hazard"):
+        assert name in r2.stdout

@@ -274,7 +274,10 @@ def test_hadare_solver_backends_identical():
 def test_free_arr_tracks_commit_release():
     cluster = _mixed_cluster()
     jobs = _jobs_with_edges(cluster, seed=1, n=3)
-    ps = PriceState(cluster, jobs, horizon=86400.0)
+    # sanitize=False: the double release below probes the clamping
+    # contract of the unsanitized layer (the sanitizer rightly rejects
+    # it — covered in test_analysis_invariants.py)
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=False)
     assert np.array_equal(ps.free_arr, ps.cap_arr)
     alloc = {(0, "v100"): 2, (1, "p100"): 1}
     ps.commit(alloc)
@@ -396,7 +399,9 @@ def test_gamma_mutations_always_invalidate_device_views(seed):
     rng = np.random.RandomState(seed)
     cluster = _mixed_cluster()
     jobs = _jobs_with_edges(cluster, seed=seed % 7, n=3)
-    ps = PriceState(cluster, jobs, horizon=86400.0)
+    # sanitize=False: random commits may over-commit on purpose — the
+    # property under test is cache invalidation, not feasibility
+    ps = PriceState(cluster, jobs, horizon=86400.0, sanitize=False)
     keys = ps.keys
 
     def dev_gamma():

@@ -109,6 +109,40 @@ def test_gavel_matrix_and_schedule_match_reference(seed, n):
     assert o1 == o2
 
 
+def test_gavel_tie_heavy_stable_order_matches_reference():
+    """Tie-heavy pin for the kind="stable" argsort in the water-filling
+    sweep: identical jobs make every frac_left compare equal, and scarce
+    capacity makes the *sweep order* decide who progresses — quicksort
+    would permute the tied block arbitrarily across NumPy builds.  With
+    the stable sort, ties break by job index: the matrix is bitwise
+    equal to the oracle, replays identically, and lower-indexed jobs
+    never end up behind equal later ones."""
+    nodes = [Node(0, {"a100": 4}), Node(1, {"v100": 4})]
+    cluster = Cluster(nodes)
+    jobs = [Job(job_id=i, arrival=0.0, n_workers=2, epochs=1,
+                iters_per_epoch=1000,
+                throughput={"a100": 2.0, "v100": 1.0})
+            for i in range(12)]
+    Y1 = ref.allocation_matrix(jobs, cluster)
+    Y2 = GavelScheduler.allocation_matrix(jobs, cluster)
+    assert np.array_equal(Y1, Y2)
+    # deterministic replay
+    assert np.array_equal(Y2, GavelScheduler.allocation_matrix(jobs,
+                                                               cluster))
+    # stable tie-break: identical jobs are served least-served-first
+    # with index as the tie key, so earlier jobs can never receive a
+    # strictly smaller time share than equal later ones
+    shares = Y2.sum(axis=1)
+    assert (np.diff(shares) <= 1e-12).all(), shares
+    assert shares[0] > 0.0
+    # the full schedule (priority realization on top of Y) also matches
+    g_new, g_ref = GavelScheduler(), ref.ReferenceGavelScheduler()
+    for rnd in range(4):
+        o1 = g_new.schedule(rnd * 360.0, 360.0, jobs, cluster)
+        o2 = g_ref.schedule(rnd * 360.0, 360.0, jobs, cluster)
+        assert o1 == o2, rnd
+
+
 @pytest.mark.parametrize("seed,n", [(0, 10), (3, 40), (7, 120)])
 def test_gavel_realization_matches_scalar_reference(seed, n):
     """The batched priority round-robin realization (one stable argsort
