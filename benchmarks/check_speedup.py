@@ -43,11 +43,13 @@ import argparse
 import json
 import os
 import sys
-import time
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+from repro.obs import StopWatch  # noqa: E402  (path set above)
 
 BASELINE = os.path.join(os.path.dirname(__file__),
                         "baseline_fig5_n256.json")
@@ -70,9 +72,9 @@ def _best_round(mk_sched, jobs_factory, cluster) -> float:
     for _ in range(REPEATS):
         jobs = jobs_factory()
         sched = mk_sched()
-        t0 = time.perf_counter()
-        sched.schedule(0.0, 360.0, jobs, cluster)
-        best = min(best, time.perf_counter() - t0)
+        with StopWatch() as sw:
+            sched.schedule(0.0, 360.0, jobs, cluster)
+        best = min(best, sw.seconds)
     return best
 
 
@@ -90,6 +92,25 @@ def measure():
         "ref_hadar_s": _best_round(ref.ReferenceHadarScheduler,
                                    jobs_factory, cluster),
     }
+
+
+def measure_latency(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN):
+    """Decision-latency distribution of the event engine on the sparse
+    fig5 trace: per-consult scheduler wall-clock quantiles read from the
+    repro.obs histogram (metrics only — trace/decision recording off)."""
+    from benchmarks.fig5_scalability import grown_cluster, sparse_trace
+    from repro import obs
+    from repro.core.hadar import HadarScheduler
+    from repro.sim.engine import simulate_events
+
+    cluster = grown_cluster(n_jobs)
+    jobs = sparse_trace(n_jobs, round_len)
+    with obs.session(trace=False, decisions=False) as ob:
+        simulate_events(HadarScheduler(), jobs, cluster,
+                        round_len=round_len)
+    h = ob.metrics.histogram("decision_latency_s")
+    return {"consults": h.count, "p50_s": h.quantile(0.50),
+            "p95_s": h.quantile(0.95), "p99_s": h.quantile(0.99)}
 
 
 def measure_event(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN):
@@ -123,20 +144,20 @@ def measure_jit(n_jobs=JIT_N_JOBS, repeats=REPEATS):
 
     best_np = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        ref_c = [_find_alloc_arrays(j, avail, gamma, ps, 0.0,
-                                    effective_throughput, False)
-                 for j in jobs]
-        best_np = min(best_np, time.perf_counter() - t0)
+        with StopWatch() as sw:
+            ref_c = [_find_alloc_arrays(j, avail, gamma, ps, 0.0,
+                                        effective_throughput, False)
+                     for j in jobs]
+        best_np = min(best_np, sw.seconds)
 
     jit_c = find_alloc_batch(jobs, avail, gamma, ps, 0.0,
                              effective_throughput)    # compile warmup
     best_jit = float("inf")
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        jit_c = find_alloc_batch(jobs, avail, gamma, ps, 0.0,
-                                 effective_throughput)
-        best_jit = min(best_jit, time.perf_counter() - t0)
+        with StopWatch() as sw:
+            jit_c = find_alloc_batch(jobs, avail, gamma, ps, 0.0,
+                                     effective_throughput)
+        best_jit = min(best_jit, sw.seconds)
 
     mismatches = sum(
         1 for a, b in zip(ref_c, jit_c)
@@ -171,6 +192,28 @@ def quick_smoke() -> None:
     rh = simulate_hadare(mix_jobs("M-3", tb), tb, round_len=90.0)
     assert all(p.finish_time is not None for p in rh.jobs), "hadare"
 
+    # observability smoke: re-run the event sim with recording on — the
+    # decisions must not move, and the emitted trace must schema-validate
+    from repro import obs
+    from repro.obs.trace import validate_trace
+    tmp = os.path.join(tempfile.mkdtemp(prefix="repro_obs_"),
+                       "quick_trace.json")
+    with obs.session(trace_path=tmp) as ob:
+        ro = simulate_events(HadarScheduler(),
+                             philly_trace(n_jobs=8, seed=9),
+                             cluster, round_len=L)
+    assert [j.finish_time for j in ro.jobs] \
+        == [j.finish_time for j in re.jobs], \
+        "obs-enabled run changed scheduling decisions"
+    with open(tmp, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    probs = validate_trace(doc)
+    assert not probs, "trace schema: " + "; ".join(probs[:3])
+    lat = ob.metrics.histogram("decision_latency_s")
+    assert lat.count > 0, "no decision-latency samples recorded"
+    obs_msg = (f"obs trace valid ({len(doc['traceEvents'])} events, "
+               f"{lat.count} consults)")
+
     # jit smoke: compile on small shapes, decisions must match the
     # per-job path exactly (seconds on CPU; skipped without jax)
     from repro.core.batch_solver import HAS_JAX
@@ -195,7 +238,8 @@ def quick_smoke() -> None:
     print(f"quick smoke passed: round TTD {rr.total_seconds:.0f}s, "
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
-          f"hadare TTD {rh.total_seconds:.0f}s, {jit_msg}, {lint_msg}")
+          f"hadare TTD {rh.total_seconds:.0f}s, {obs_msg}, {jit_msg}, "
+          f"{lint_msg}")
 
 
 def main():
@@ -218,11 +262,13 @@ def main():
     from repro.core.batch_solver import HAS_JAX
 
     current = measure()
+    latency = measure_latency()
     event = measure_event()
     jit = measure_jit() if HAS_JAX else None
     if args.record:
         with open(BASELINE, "w") as f:
-            json.dump({"n_jobs": N_JOBS, **current}, f, indent=1)
+            json.dump({"n_jobs": N_JOBS, **current, "latency": latency},
+                      f, indent=1)
         with open(EVENT_BASELINE, "w") as f:
             json.dump(event, f, indent=1)
         if jit is not None:
@@ -247,6 +293,28 @@ def main():
         print(f"FAIL: normalized scheduling latency regressed "
               f">{MAX_REGRESSION}x vs baseline")
         failed = True
+
+    # ---- decision-latency p99 gate (obs histogram) ----------------------
+    print(f"decision latency (event engine, sparse n={SPARSE_N_JOBS}): "
+          f"p50 {latency['p50_s'] * 1e3:.2f}ms "
+          f"p95 {latency['p95_s'] * 1e3:.2f}ms "
+          f"p99 {latency['p99_s'] * 1e3:.2f}ms "
+          f"over {latency['consults']} consults")
+    if "latency" in base:
+        # normalize p99 by the same-process scalar-reference runtime so
+        # slower CI hardware cancels, exactly like the hadar_s gate
+        cur_l = latency["p99_s"] / max(current["ref_hadar_s"], 1e-9)
+        base_l = base["latency"]["p99_s"] / max(base["ref_hadar_s"], 1e-9)
+        lratio = cur_l / max(base_l, 1e-9)
+        print(f"normalized p99 ratio {lratio:.2f}x vs baseline "
+              f"(margin {MAX_REGRESSION}x)")
+        if lratio > MAX_REGRESSION:
+            print(f"FAIL: decision-latency p99 regressed "
+                  f">{MAX_REGRESSION}x vs baseline")
+            failed = True
+    else:
+        print(f"no latency entry in {BASELINE}; "
+              f"run with --record to add one")
 
     cur_frac = event["event_wall_s"] / max(event["round_wall_s"], 1e-9)
     print(f"event engine: {event['event_wall_s']:.3f}s vs round path "

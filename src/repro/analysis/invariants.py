@@ -87,6 +87,16 @@ def violate(name: str, message: str, **snapshot) -> None:
     raise InvariantViolation(name, message, snapshot)
 
 
+def _tick(check: str) -> None:
+    """Count an executed invariant check on the installed observer
+    (repro.obs): one counter per check function, zero-cost when
+    observability is off."""
+    from repro import obs as _obs
+    ob = _obs.get()
+    if ob.enabled:
+        ob.count("invariant_checks." + check)
+
+
 # --------------------------------------------------------------------------
 # PriceState-level checks (duck-typed: no repro.core import, pricing
 # imports this module)
@@ -94,6 +104,7 @@ def violate(name: str, message: str, **snapshot) -> None:
 
 def check_price_state(ps, context: str = "") -> None:
     """free-range / conservation / price-bounds on a PriceState."""
+    _tick("price_state")
     free = np.asarray(ps.free_arr, dtype=float)
     cap = np.asarray(ps.cap_arr, dtype=float)
     gamma = np.asarray(ps.gamma_arr, dtype=float)
@@ -136,6 +147,7 @@ def check_price_state(ps, context: str = "") -> None:
 def check_commit_amounts(ps, alloc: Dict[Tuple[int, str], int],
                          op: str) -> None:
     """Per-key sanity of a commit/release delta before it is applied."""
+    _tick("commit_amounts")
     for key, count in alloc.items():
         if count < 0:
             violate("free-range", f"{op} with negative count", key=key,
@@ -152,6 +164,7 @@ def check_commit_amounts(ps, alloc: Dict[Tuple[int, str], int],
 def check_candidate(job_id, n_workers: int, alloc, payoff: float,
                     cost: float, forced: bool = False,
                     context: str = "") -> None:
+    _tick("candidate")
     total = 0
     for key, count in alloc.items():
         if count <= 0:
@@ -178,6 +191,7 @@ def check_candidate(job_id, n_workers: int, alloc, payoff: float,
 def check_selection(selection, free: Dict[Tuple[int, str], float],
                     context: str = "") -> None:
     """joint-capacity over a set of selected (job_id -> Candidate)."""
+    _tick("selection")
     used: Dict[Tuple[int, str], float] = {}
     for job_id, cand in selection.items():
         for key, count in cand.alloc.items():
@@ -198,6 +212,7 @@ def check_selection(selection, free: Dict[Tuple[int, str], float],
 def check_cluster_allocs(jobs, capacity: Dict[Tuple[int, str], int],
                          t: float, engine: str) -> None:
     """gang-atomicity + conservation over the live allocation map."""
+    _tick("cluster_allocs")
     used: Dict[Tuple[int, str], int] = {}
     for job in jobs:
         alloc = getattr(job, "alloc", None)
@@ -229,6 +244,7 @@ def check_cluster_allocs(jobs, capacity: Dict[Tuple[int, str], int],
 
 def check_progress(job, t: float, engine: str,
                    prev_done: Optional[float] = None) -> None:
+    _tick("progress")
     done = float(job.done_iters)
     total = float(job.total_iters)
     if done < -_EPS or done > total * (1.0 + 1e-9) + 1e-6:
@@ -243,6 +259,7 @@ def check_progress(job, t: float, engine: str,
 
 def check_utilization(gru: float, cru: float, t: float,
                       engine: str) -> None:
+    _tick("utilization")
     if not (-_EPS <= gru <= 1.0 + _EPS):
         violate("gru-cru-range", "GRU outside [0, 1]",
                 engine=engine, t=t, gru=gru)
@@ -253,6 +270,7 @@ def check_utilization(gru: float, cru: float, t: float,
 
 def check_monotonic(t_new: float, t_prev: float, engine: str,
                     what: str = "event time") -> None:
+    _tick("monotonic")
     if t_new < t_prev - 1e-9:
         violate("time-monotonic", f"{what} moved backwards",
                 engine=engine, t_new=t_new, t_prev=t_prev)
@@ -261,6 +279,7 @@ def check_monotonic(t_new: float, t_prev: float, engine: str,
 def check_sibling_nodes(parent_id, copies, t: float) -> None:
     """HadarE sibling-disjointness: each live copy of a job on its own
     node set, no node shared between siblings."""
+    _tick("sibling_nodes")
     seen: Dict[int, Any] = {}
     for copy in copies:
         alloc = getattr(copy, "alloc", None)

@@ -1,6 +1,6 @@
 """Codebase-specific AST lint passes.
 
-Four passes, each targeting a concrete failure mode of this repo:
+Five passes, each targeting a concrete failure mode of this repo:
 
 * ``jit-purity`` (RA101-RA103) — functions traced by ``jax.jit`` /
   ``jax.vmap`` must be pure: no ``global``/``nonlocal`` rebinding, no
@@ -24,6 +24,13 @@ Four passes, each targeting a concrete failure mode of this repo:
   go through the power-of-2 padding buckets (``bucket_size``) and a
   memoized kernel; constructing ``jax.jit`` inside a loop or invoking
   ``jax.jit(f)(x)`` inline recompiles per call.
+* ``timing-instrumentation`` (RA501) — wall-clock timing inside
+  ``repro/`` must go through ``repro.obs`` (``StopWatch`` or the
+  observer hooks), not ad-hoc ``time.perf_counter()`` pairs: scattered
+  timers drift out of the metrics registry and double-count latency.
+  ``repro/obs/`` itself is exempt (it owns the clock); other uses are
+  baselined with a justification (e.g. the launch harness's wall-clock
+  stamps).
 
 All passes are stdlib-``ast`` only.  They are deliberately
 conservative: a call target that cannot be resolved within the module
@@ -61,6 +68,15 @@ DECISION_PATH_GLOBS = ("*repro/core/*",)
 # Kernel-dispatch helpers of the batched solver (RA402).
 KERNEL_GETTERS = {"_get_kernel"}
 PAD_HELPERS = {"bucket_size"}
+
+# Ad-hoc wall-clock callables (RA501): timing in repro/ goes through
+# repro.obs instead.
+TIMING_FUNCS = {"time.perf_counter", "time.time", "time.monotonic",
+                "time.process_time", "time.perf_counter_ns",
+                "time.time_ns", "time.monotonic_ns",
+                "time.process_time_ns"}
+TIMING_SCOPE_GLOBS = ("*repro/*",)
+TIMING_EXEMPT_GLOBS = ("*repro/obs/*",)
 
 
 # --------------------------------------------------------------------------
@@ -511,9 +527,44 @@ class RecompileHazardPass(LintPass):
         return False
 
 
+# --------------------------------------------------------------------------
+# timing-instrumentation (RA501)
+# --------------------------------------------------------------------------
+
+class TimingInstrumentationPass(LintPass):
+    name = "timing-instrumentation"
+    codes = ("RA501",)
+
+    def __init__(self, scope_globs: Sequence[str] = TIMING_SCOPE_GLOBS,
+                 exempt_globs: Sequence[str] = TIMING_EXEMPT_GLOBS):
+        self.scope_globs = tuple(scope_globs)
+        self.exempt_globs = tuple(exempt_globs)
+
+    def run(self, mod: Module) -> List[Finding]:
+        if not any(fnmatch.fnmatch(mod.path, g) for g in self.scope_globs):
+            return []
+        if any(fnmatch.fnmatch(mod.path, g) for g in self.exempt_globs):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func, mod.aliases)
+            if dn in TIMING_FUNCS:
+                fn_name = dn.rsplit(".", 1)[1]
+                out.append(mod.finding(
+                    "RA501", self.name, node,
+                    f"time.{fn_name}() outside repro/obs: route wall-clock "
+                    f"timing through repro.obs (StopWatch or an observer "
+                    f"hook) so latency lands in one registry — "
+                    f"non-scheduler wall stamps must be baselined with a "
+                    f"justification"))
+        return out
+
+
 def default_passes() -> List[LintPass]:
     return [JitPurityPass(), BitwiseReferencePass(), DeterminismPass(),
-            RecompileHazardPass()]
+            RecompileHazardPass(), TimingInstrumentationPass()]
 
 
 PASS_DOC = {
@@ -525,4 +576,6 @@ PASS_DOC = {
                    "RA303 global np.random, RA304 hardcoded RNG seed",
     "recompile-hazard": "RA401 jit-in-loop, RA402 kernel dispatch without "
                         "bucket_size padding, RA403 inline jax.jit(f)(x)",
+    "timing-instrumentation": "RA501 ad-hoc time.perf_counter()/time.time() "
+                              "in repro/ outside repro/obs",
 }

@@ -65,6 +65,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.utility import effective_throughput
 
 try:  # the container bakes in jax; degrade to the NumPy path without it
@@ -241,6 +242,9 @@ def _build_kernel(N: int, R: int, comm_frac: float):
 def _get_kernel(N: int, R: int, comm_frac: float):
     key = (N, R, comm_frac)
     if key not in _KERNELS:
+        _ob = _obs.get()
+        if _ob.enabled:       # process-global cache: 0 in warm processes
+            _ob.count("jax_kernel_builds")
         _KERNELS[key] = _build_kernel(N, R, comm_frac)
     return _KERNELS[key]
 
@@ -337,6 +341,11 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
     s_price = P.reshape(-1)[order]
 
     kern = _get_kernel(N, R, COMM_COST_FRAC)
+    _ob = _obs.get()
+    if _ob.enabled:
+        _ob.count("solver_batch_calls")
+        # one XLA compilation per distinct dispatch-shape tuple
+        _ob.kernel_shape((N, R, COMM_COST_FRAC, B, M, C))
     node1h = (np.asarray(ps.node_row)[:, None]
               == np.arange(N)[None, :]).astype(float)
     with enable_x64():
@@ -380,6 +389,34 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
     results: List = [None] * J
     node_ids = [n.node_id for n in ps.cluster.nodes]
 
+    if _ob.enabled:
+        # runner-up provenance (repro.obs.explain): masked second argmax
+        # over the same candidate axis — matches the per-job path's
+        # second-best tracking, including first-maximum tie handling.
+        # Payoffs here come from the batch pay matrix, so they can differ
+        # from the per-job path's by last-ulp amounts (see the decision-
+        # fidelity caveat above) — acceptable for provenance metadata.
+        pay2 = pay.copy()
+        pay2[np.arange(J), win] = -np.inf
+        win2 = np.argmax(pay2, axis=1)
+        win2_pay = pay2[np.arange(J), win2]
+        k2, slot2 = np.divmod(win2, N + 1)
+
+        def _ru_of(j: int) -> Optional[dict]:
+            if not win2_pay[j] > -np.inf:
+                return None
+            s2 = int(slot2[j])
+            if s2 < N:
+                return {"kind": "pack", "node": node_ids[s2],
+                        "payoff": float(win2_pay[j])}
+            kp = int(k2[j]) + 1
+            return {"kind": "spread", "prefix": kp,
+                    "n_servers": int(sp_nserv[j, kp - 1]),
+                    "payoff": float(win2_pay[j])}
+    else:
+        def _ru_of(j: int) -> Optional[dict]:
+            return None
+
     pj = np.nonzero(is_pack)[0]
     if pj.size:
         hs = slot[pj]
@@ -399,7 +436,7 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
             alloc = {(nid, gtypes[prefs[i][kk]]): int(tk[kk])
                      for kk in range(kjs[i]) if tk[kk] > 0}
             results[j] = Candidate(alloc, float(costs[i]), payoff,
-                                   float(rates[i]))
+                                   float(rates[i]), runner_up=_ru_of(j))
 
     for j in np.nonzero(found & (slot == N))[0].tolist():
         k = int(kb[j]) + 1                              # spread prefix k
@@ -423,7 +460,8 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
             continue
         alloc = {ps.keys[m]: int(counts[m]) for m in ms}
         results[j] = Candidate(alloc, cost, payoff,
-                               float(x_sorted[j, jmax]))
+                               float(x_sorted[j, jmax]),
+                               runner_up=_ru_of(j))
     from repro.analysis import invariants as _inv
     if _inv.sanitize_enabled():
         for job, cand in zip(jobs, results):

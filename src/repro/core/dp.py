@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.pricing import PriceState
 from repro.core.types import Alloc, Cluster, Job
 from repro.core.utility import UtilityFn
@@ -59,6 +60,12 @@ class Candidate:
     cost: float
     payoff: float
     rate: float      # bottleneck iterations/sec (x_j)
+    # allocation provenance (repro.obs): the second-best candidate in the
+    # FIND_ALLOC enumeration and its payoff.  Populated only while an
+    # observer is installed; excluded from equality/repr so it can never
+    # participate in a decision comparison.
+    runner_up: Optional[dict] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
 
 def _estimate_payoff(job: Job, alloc: Alloc, cost: float, now: float,
@@ -187,22 +194,54 @@ def _find_alloc_arrays(job: Job, avail: np.ndarray, gamma: np.ndarray,
 
     # ---- pick the best candidate, in the reference enumeration order ---
     # (per fastest-type prefix: consolidated nodes in node order, then the
-    # prefix's spread candidate; first maximum wins on ties)
+    # prefix's spread candidate; first maximum wins on ties).  Runner-up
+    # tracking (want_ru) is provenance-only: it observes the same scan
+    # without touching the winner comparison, so decisions are identical
+    # with observability on or off.
+    want_ru = _obs.get().enabled
     best_payoff = -np.inf
     best = None                      # ("pack", node_row) | ("spread", k)
+    ru_payoff = -np.inf
+    ru = None
     for k in range(1, K + 1):
         for h in np.nonzero(feasible & (k_first == k - 1))[0]:
-            if packed_payoff[h] > best_payoff:
-                best_payoff = float(packed_payoff[h])
+            p = packed_payoff[h]
+            if p > best_payoff:
+                if want_ru:
+                    ru_payoff, ru = best_payoff, best
+                best_payoff = float(p)
                 best = ("pack", int(h))
-        if spread[k] is not None and spread[k][0] > best_payoff:
-            best_payoff = float(spread[k][0])
-            best = ("spread", k)
+            elif want_ru and p > ru_payoff:
+                ru_payoff = float(p)
+                ru = ("pack", int(h))
+        if spread[k] is not None:
+            p = spread[k][0]
+            if p > best_payoff:
+                if want_ru:
+                    ru_payoff, ru = best_payoff, best
+                best_payoff = float(p)
+                best = ("spread", k)
+            elif want_ru and p > ru_payoff:
+                ru_payoff = float(p)
+                ru = ("spread", k)
 
     if best is None:
         return None
     if best_payoff <= 0 and not force:  # mu_j <= 0 -> reject (lines 29-33)
         return None
+
+    ru_info = None
+    if want_ru and ru is not None:
+        if ru[0] == "pack":
+            ru_info = {"kind": "pack",
+                       "node": ps.cluster.nodes[ru[1]].node_id,
+                       "payoff": float(ru_payoff)}
+        else:
+            keys_ru = spread[ru[1]][3]
+            ru_info = {"kind": "spread", "prefix": ru[1],
+                       "n_servers": int(np.unique(
+                           ps.node_row[keys_ru]).size),
+                       "payoff": float(ru_payoff)}
 
     if best[0] == "pack":
         h = best[1]
@@ -210,13 +249,13 @@ def _find_alloc_arrays(job: Job, avail: np.ndarray, gamma: np.ndarray,
         alloc: Alloc = {(node_id, types[j]): int(take[h, j])
                         for j in range(K) if take[h, j] > 0}
         return Candidate(alloc, float(packed_cost[h]), best_payoff,
-                         float(x_types[j_last[h]]))
+                         float(x_types[j_last[h]]), runner_up=ru_info)
     _, cost2, jmax, keys_m = spread[best[1]]
     counts = np.bincount(keys_m, minlength=len(ps.keys))
     alloc2: Alloc = {ps.keys[m]: int(c)
                      for m, c in enumerate(counts) if c}
     return Candidate(alloc2, float(cost2), best_payoff,
-                     float(x_types[jmax]))
+                     float(x_types[jmax]), runner_up=ru_info)
 
 
 def _scan_standalone(queue: List[Job], avail0: np.ndarray,
@@ -225,15 +264,26 @@ def _scan_standalone(queue: List[Job], avail0: np.ndarray,
                      free_is_ps: bool) -> List[Optional[Candidate]]:
     """Standalone candidate per queued job against one shared state —
     one fused device call on the jax backend, a per-job loop otherwise."""
-    from repro.core.batch_solver import use_batch
+    from repro.core.batch_solver import bucket_size, use_batch
 
-    if use_batch(solver, len(queue)):
+    _ob = _obs.get()
+    batched = use_batch(solver, len(queue))
+    b_us = _ob.begin() if _ob.enabled else 0.0
+    if batched:
         from repro.core.batch_solver import find_alloc_batch
         dev = ps.device_view("free") if free_is_ps else None
-        return find_alloc_batch(queue, avail0, gamma0, ps, now, utility,
-                                avail_dev=dev)
-    return [_find_alloc_arrays(j, avail0, gamma0, ps, now, utility,
-                               force=False) for j in queue]
+        out = find_alloc_batch(queue, avail0, gamma0, ps, now, utility,
+                               avail_dev=dev)
+    else:
+        out = [_find_alloc_arrays(j, avail0, gamma0, ps, now, utility,
+                                  force=False) for j in queue]
+    if _ob.enabled:
+        _ob.end("solver_dispatch", b_us,
+                backend="jax" if batched else "numpy",
+                queue_len=len(queue),
+                bucket=bucket_size(len(queue)) if batched else None,
+                candidates=sum(1 for c in out if c is not None))
+    return out
 
 
 def _sanitize_selection(sel: Dict[int, "Candidate"], queue: List[Job],

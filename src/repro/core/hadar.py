@@ -9,9 +9,9 @@ rounds require allocation changes".
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional
 
+from repro import obs as _obs
 from repro.core.dp import _find_alloc_arrays, dp_allocation
 from repro.core.pricing import PriceState
 from repro.core.schedulers import Scheduler
@@ -52,8 +52,27 @@ class HadarScheduler(Scheduler):
     def note_completion(self) -> None:
         self._had_completion = True
 
+    def _log_decision(self, ob, now, job, cand, ps, phase) -> None:
+        """Allocation provenance (repro.obs.explain): record the winning
+        keys with their Eq. 5 marginal unit prices *at the pre-commit
+        gamma* plus the inputs the price was derived from, so each log
+        line re-derives exactly against ``PriceState.price``."""
+        rows = []
+        for (node, gtype), count in cand.alloc.items():
+            key = (node, gtype)
+            cap = ps._cap_by_key.get(key, 0)
+            rows.append({
+                "node": node, "type": gtype, "count": int(count),
+                "unit_price": ps.price(node, gtype, cap),
+                "gamma": int(ps.gamma.get(key, 0)), "cap": int(cap),
+                "u_min": ps.u_min[gtype], "u_max": ps.u_max[gtype]})
+        ob.decision(_obs.decision_record(
+            now, job.job_id, job.n_workers, phase, self.solver, rows,
+            cand.cost, cand.payoff, cand.rate, cand.runner_up))
+
     def schedule(self, now, round_len, jobs, cluster):
-        t0 = time.perf_counter()
+        _ob = _obs.get()
+        sw = _obs.StopWatch().start()
         active = [j for j in jobs if not j.is_done() and j.arrival <= now]
         out: Dict[int, Alloc] = {}
 
@@ -84,12 +103,19 @@ class HadarScheduler(Scheduler):
             ps.commit(j.alloc)              # free_arr tracks the delta
             out[j.job_id] = j.alloc
 
+        b_us = _ob.begin() if _ob.enabled else 0.0
         sel = dp_allocation(queue, None, ps, now, self.utility,
                             max_exact=self.max_exact_dp,
                             solver=self.solver)
+        if _ob.enabled:
+            _ob.end("hadar.dp", b_us, t=now, queue_len=len(queue),
+                    selected=len(sel), full_pass=full_pass)
+            by_id = {j.job_id: j for j in queue}
         extra: Dict = {}
         for jid, cand in sel.items():
             out[jid] = cand.alloc
+            if _ob.enabled:
+                self._log_decision(_ob, now, by_id[jid], cand, ps, "dp")
             ps.commit(cand.alloc)
             for k, v in cand.alloc.items():
                 extra[k] = extra.get(k, 0) + v
@@ -113,9 +139,13 @@ class HadarScheduler(Scheduler):
                 if cand is None:
                     continue
                 out[j.job_id] = cand.alloc
+                if _ob.enabled:
+                    self._log_decision(_ob, now, j, cand, ps, "backfill")
                 ps.commit(cand.alloc)
                 for k, v in cand.alloc.items():
                     extra[k] = extra.get(k, 0) + v
 
-        self.last_sched_seconds = time.perf_counter() - t0
+        self.last_sched_seconds = sw.stop()
+        if _ob.enabled:
+            _ob.free_capacity(ps.keys, ps.free_arr)
         return out

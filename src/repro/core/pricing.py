@@ -41,6 +41,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.analysis import invariants as _inv
 from repro.core.types import Cluster, Job
 from repro.core.utility import UtilityFn, effective_throughput
@@ -232,6 +233,8 @@ class PriceState:
         are recomputed for the new active set, gamma and the free vector
         reset, and every array object keeps its identity (the event
         engine's cached device buffers stay valid until dirtied)."""
+        _ob = _obs.get()
+        b_us = _ob.begin() if _ob.enabled else 0.0
         self.u_max.clear()
         self.u_min.clear()
         self._compute_bounds(jobs, now)
@@ -246,6 +249,9 @@ class PriceState:
         self.free_arr[:] = self.cap_arr
         self._conserved = True              # clean slate: gamma+free==cap
         self._touch("umin", "umax", "q", "free")
+        if _ob.enabled:
+            _ob.end("pricestate.refresh", b_us, jobs=len(jobs), now=now)
+            _ob.count("pricestate_refreshes")
         if self._sanitize:
             _inv.check_price_state(self, "after refresh")
 
@@ -279,6 +285,9 @@ class PriceState:
                             for r in self.u_max])
 
     def commit(self, alloc: Dict[Tuple[int, str], int]) -> None:
+        _ob = _obs.get()
+        if _ob.enabled:
+            _ob.price_op("commit", len(alloc))
         if self._sanitize:
             _inv.check_commit_amounts(self, alloc, "commit")
         self._in_managed_op = True
@@ -295,6 +304,9 @@ class PriceState:
             _inv.check_price_state(self, "after commit")
 
     def release(self, alloc: Dict[Tuple[int, str], int]) -> None:
+        _ob = _obs.get()
+        if _ob.enabled:
+            _ob.price_op("release", len(alloc))
         if self._sanitize:
             _inv.check_commit_amounts(self, alloc, "release")
             if self._conserved:

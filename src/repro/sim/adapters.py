@@ -21,11 +21,11 @@ reference).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.schedulers import Scheduler
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
 from repro.sim.engine import (RESTART_PENALTY, _alloc_equal,
@@ -63,9 +63,11 @@ class CountingScheduler(Scheduler):
             self.inner.note_completion()
 
     def schedule(self, now, round_len, jobs, cluster):
-        t0 = time.perf_counter()
+        # plain StopWatch (not obs.consult): the engine already owns the
+        # decision-latency histogram; a second timer here would double-count
+        sw = _obs.StopWatch().start()
         out = self.inner.schedule(now, round_len, jobs, cluster)
-        self.total_seconds += time.perf_counter() - t0
+        self.total_seconds += sw.stop()
         self.calls += 1
         return out
 
@@ -103,6 +105,7 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
 
     sched = scheduler or HadarScheduler()
     _apply_solver(sched, solver)
+    _ob = _obs.get()
     from repro.analysis import invariants as _inv
     from repro.sim.engine import _cap_by_key
     _san = _inv.sanitize_enabled(sanitize)
@@ -149,10 +152,18 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                 registered[i] = True
 
         live = [c for c in all_copies if not c.is_done()]
-        t0 = time.perf_counter()
-        desired = sched.schedule(t, round_len, live, cluster)
-        desired = _dedupe_siblings(desired, live, by_id)
-        sched_s = time.perf_counter() - t0
+        qlen = (sum(1 for c in live if c.alloc is None)
+                if _ob.enabled else 0)
+        # the consult covers schedule + sibling dedupe, matching the
+        # seed's sched_seconds accounting
+        with _ob.consult("hadare", sched.name, t, qlen) as sw:
+            desired = sched.schedule(t, round_len, live, cluster)
+            n_raw = len(desired) if _ob.enabled else 0
+            desired = _dedupe_siblings(desired, live, by_id)
+        sched_s = sw.seconds
+        if _ob.enabled:
+            _ob.sim_instant("hadare.consolidation", t, raw=n_raw,
+                            kept=len(desired), copies=len(live))
 
         changed = 0
         busy_nodes: set = set()
@@ -205,6 +216,9 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
             fin_used = (float(need[i] / rate_sum[i]) if rate_sum[i] > 0.0
                         else round_len)
             parents[i].finish_time = t + min(round_len, fin_used)
+            if _ob.enabled:
+                _ob.completion(parents[i].finish_time, parents[i].job_id,
+                               parents[i].finish_time - parents[i].arrival)
             for c in copy_objs[i]:
                 c.alloc = None
         if bool(finished.any()):
@@ -238,6 +252,10 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        if _ob.enabled:
+            r = rounds[-1]
+            _ob.interval("hadare", r.t, round_len, r.gru, r.cru,
+                         r.running, r.waiting, r.changed)
         if _san:
             _inv.check_utilization(rounds[-1].gru, rounds[-1].cru, t,
                                    "hadare")
@@ -293,6 +311,9 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
         for i in range(skip):
             rounds.append(dataclasses.replace(
                 steady, t=t + i * round_len, sched_seconds=0.0))
+        if _ob.enabled:
+            _ob.sim_span("fast_forward", t, t + skip * round_len,
+                         rounds=skip, engine="hadare")
         t += skip * round_len
         rnd += skip
 

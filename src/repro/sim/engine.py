@@ -39,9 +39,9 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-import time
 from typing import Dict, List, Optional, Set
 
+from repro import obs as _obs
 from repro.analysis import invariants as _inv
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
 from repro.sim.events import EventKind, EventQueue
@@ -107,6 +107,7 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
     (default: the ``REPRO_SANITIZE`` env flag) asserts the paper's
     invariants after every scheduling decision."""
     _apply_solver(scheduler, solver)
+    _ob = _obs.get()
     _san = _inv.sanitize_enabled(sanitize)
     cap = _cap_by_key(cluster) if _san else None
     prev_done: Dict[int, float] = {}
@@ -121,9 +122,12 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
     while rnd < max_rounds:
         if all(j.is_done() for j in jobs):
             break
-        t0 = time.perf_counter()
-        desired = scheduler.schedule(t, round_len, jobs, cluster)
-        sched_s = time.perf_counter() - t0
+        qlen = (sum(1 for j in jobs if not j.is_done()
+                    and j.arrival <= t and not j.alloc)
+                if _ob.enabled else 0)
+        with _ob.consult("rounds", scheduler.name, t, qlen) as sw:
+            desired = scheduler.schedule(t, round_len, jobs, cluster)
+        sched_s = sw.seconds
 
         changed = 0
         busy_gpu_time = 0.0
@@ -154,6 +158,9 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
                 used = penalty + need / (rate * w)
                 j.done_iters = j.total_iters
                 j.finish_time = t + used
+                if _ob.enabled:
+                    _ob.completion(j.finish_time, j.job_id,
+                                   j.finish_time - j.arrival)
                 any_completed = True
                 busy_gpu_time += w * used
                 busy_nodes.update(alloc_nodes(new))
@@ -178,6 +185,10 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        if _ob.enabled:
+            r = rounds[-1]
+            _ob.interval("rounds", r.t, round_len, r.gru, r.cru,
+                         r.running, r.waiting, r.changed)
         if _san:
             _check_state(jobs, cap, t, "rounds", prev_done)
             _inv.check_utilization(rounds[-1].gru, rounds[-1].cru, t,
@@ -227,6 +238,9 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
         for i in range(skip):
             rounds.append(dataclasses.replace(
                 steady, t=t + i * round_len, sched_seconds=0.0))
+        if _ob.enabled:
+            _ob.sim_span("fast_forward", t, t + skip * round_len,
+                         rounds=skip, engine="rounds")
         t += skip * round_len
         rnd += skip
 
@@ -257,6 +271,7 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     state rebuild.
     """
     _apply_solver(scheduler, solver)
+    _ob = _obs.get()
     _san = _inv.sanitize_enabled(sanitize)
     cap = _cap_by_key(cluster) if _san else None
     prev_done: Dict[int, float] = {}
@@ -307,7 +322,13 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                                 open_changed, open_sched_s)
 
     while q and n_events < max_events:
-        batch = q.pop_batch()
+        if _ob.enabled:
+            b_us = _ob.begin()
+            batch = q.pop_batch()
+            _ob.end("event_pop", b_us, n=len(batch),
+                    t=batch[0].time if batch else None)
+        else:
+            batch = q.pop_batch()
         if not batch:
             break
         t_new = batch[0].time
@@ -328,15 +349,20 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                 j.done_iters = j.total_iters
                 j.finish_time = t
                 j.alloc = None
+                if _ob.enabled:
+                    _ob.completion(t, j.job_id, t - j.arrival)
                 any_completed = True
         if any_completed and hasattr(scheduler, "note_completion"):
             scheduler.note_completion()
         if all(j.is_done() for j in jobs):
             break
 
-        t0 = time.perf_counter()
-        desired = scheduler.schedule(t, round_len, jobs, cluster)
-        open_sched_s = time.perf_counter() - t0
+        qlen = (sum(1 for j in jobs if not j.is_done()
+                    and j.arrival <= t and j.alloc is None)
+                if _ob.enabled else 0)
+        with _ob.consult("events", scheduler.name, t, qlen) as sw:
+            desired = scheduler.schedule(t, round_len, jobs, cluster)
+        open_sched_s = sw.seconds
         sched_calls += 1
 
         for j in jobs:

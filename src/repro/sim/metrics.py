@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Set
 
+from repro import obs as _obs
 from repro.core.types import Job
 
 
@@ -149,6 +150,12 @@ class MetricsRecorder:
                 _inv.check_monotonic(t0, self.records[-1].t, "events",
                                      "interval start")
         self.records.append(rec)
+        # hooked at the recorder so trace "interval" spans carry the
+        # IntervalRecord's own (t, dt) — boundaries match bitwise
+        _ob = _obs.get()
+        if _ob.enabled:
+            _ob.interval("events", t0, dt, rec.gru, rec.cru,
+                         running, waiting, changed)
 
     def result(self, name: str, jobs: List[Job], total_seconds: float,
                n_events: int, sched_calls: int) -> EventSimResult:

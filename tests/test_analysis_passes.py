@@ -248,6 +248,50 @@ def test_recompile_hazard_allows_module_level_jit():
 
 
 # ---------------------------------------------------------------------------
+# timing-instrumentation
+# ---------------------------------------------------------------------------
+
+def test_timing_fires_on_perf_counter_in_repro():
+    src = ("import time\n"
+           "def f():\n"
+           "    t0 = time.perf_counter()\n"
+           "    return time.perf_counter() - t0\n")
+    assert codes(lint_source(src, OUT)) == ["RA501", "RA501"]
+
+
+def test_timing_fires_on_time_time_and_aliased_import():
+    src = ("from time import time as now\n"
+           "def f():\n"
+           "    return now()\n")
+    assert "RA501" in codes(lint_source(src, CORE))
+
+
+def test_timing_exempts_repro_obs_itself():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.perf_counter()\n")
+    assert lint_source(src, "src/repro/obs/trace.py") == []
+
+
+def test_timing_scoped_to_repro_tree():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.time()\n")
+    assert lint_source(src, "benchmarks/snippet.py") == []
+
+
+def test_timing_quiet_on_non_timing_calls():
+    src = ("import time\n"
+           "from repro.obs import StopWatch\n"
+           "def f():\n"
+           "    time.sleep(0.1)\n"
+           "    with StopWatch() as sw:\n"
+           "        pass\n"
+           "    return sw.seconds\n")
+    assert lint_source(src, OUT) == []
+
+
+# ---------------------------------------------------------------------------
 # baseline + engine + CLI
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,267 @@
+"""Unit tests for repro.obs: streaming histogram accuracy against exact
+numpy percentiles, registry semantics, StopWatch, trace schema
+validation (good and bad), merge/summarize, session install/restore,
+and the ``python -m repro.obs`` CLI."""
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.explain import (decision_record, explain_allocation,
+                               load_jsonl, summarize_decisions)
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import (TraceRecorder, merge_traces, summarize_trace,
+                             validate_trace)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_histogram_quantiles_within_bucket_tolerance(seed):
+    rng = np.random.RandomState(seed)
+    # span several decades, like consult latencies do
+    vals = np.exp(rng.uniform(np.log(1e-5), np.log(10.0), size=5000))
+    h = Histogram("lat")
+    for v in vals:
+        h.observe(float(v))
+    factor = 10.0 ** (1.0 / h.bpd)      # one-bucket relative error bound
+    for q in (0.5, 0.95, 0.99):
+        exact = float(np.percentile(vals, q * 100))
+        got = h.quantile(q)
+        assert exact / factor <= got <= exact * factor, \
+            (q, got, exact, factor)
+    assert h.count == len(vals)
+    assert h.min == float(vals.min()) and h.max == float(vals.max())
+    assert h.mean() == pytest.approx(float(vals.mean()))
+
+
+def test_histogram_edge_cases():
+    h = Histogram("h")
+    assert h.quantile(0.5) == 0.0       # empty
+    h.observe(0.0)                      # non-positive -> underflow bucket
+    h.observe(-1.0)
+    h.observe(1e9)                      # overflow bucket
+    assert h.quantile(0.0) == -1.0      # underflow reports exact min
+    assert h.quantile(1.0) == 1e9       # overflow reports exact max
+    assert h.count == 3
+    j = h.to_json()
+    assert j["count"] == 3 and j["max"] == 1e9
+
+
+def test_registry_get_or_create_and_summary():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.counter("a").inc(2)
+    reg.gauge("b").set(7)
+    reg.histogram("c").observe(0.5)
+    assert reg.counter("a").value == 3
+    assert reg.names() == ["a", "b", "c"]
+    s = reg.summary()
+    assert s["counters"]["a"] == 3
+    assert s["gauges"]["b"] == 7.0
+    assert s["histograms"]["c"]["count"] == 1
+    json.dumps(s)                       # plain-JSON by contract
+
+
+def test_stopwatch_laps():
+    sw = obs.StopWatch()
+    with sw:
+        x = sum(range(1000))
+    assert x and sw.seconds >= 0.0
+    sw2 = obs.StopWatch().start()
+    assert sw2.stop() >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# trace schema
+# ---------------------------------------------------------------------------
+
+def test_trace_recorder_roundtrip_and_nesting(tmp_path):
+    tr = TraceRecorder()
+    outer = tr.now()
+    inner = tr.now()
+    tr.complete("inner", inner, {"k": 1})
+    tr.complete("outer", outer)
+    tr.instant("mark")
+    tr.sim_span("interval", 0.0, 360.0, {"gru": 0.5})
+    tr.sim_span("interval", 360.0, 720.0)
+    tr.sim_instant("completion", 400.0, {"job": 3})
+    doc = tr.to_json()
+    assert validate_trace(doc) == []
+    path = tmp_path / "t.json"
+    tr.save(str(path))
+    assert validate_trace(json.loads(path.read_text())) == []
+    summ = summarize_trace(doc)
+    assert summ["sim-time/interval"]["count"] == 2
+    assert summ["sim-time/interval"]["total_ms"] == \
+        pytest.approx(720e3)
+    assert summ["wall-clock/outer"]["count"] == 1
+
+
+def test_validate_trace_flags_bad_documents():
+    assert validate_trace({}) == ["traceEvents missing or not a list"]
+    missing = {"traceEvents": [{"ph": "X", "pid": 1, "ts": 0.0,
+                                "dur": 1.0}]}
+    assert any("missing 'name'" in p for p in validate_trace(missing))
+    bad_dur = {"traceEvents": [{"name": "a", "ph": "X", "pid": 1,
+                                "ts": 0.0, "dur": -5.0}]}
+    assert any("bad dur" in p for p in validate_trace(bad_dur))
+    overlap = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 10.0},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5.0,
+         "dur": 10.0}]}
+    assert any("partially overlaps" in p for p in validate_trace(overlap))
+    # strict nesting and adjacency are both fine
+    nested = {"traceEvents": [
+        {"name": "p", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 10.0},
+        {"name": "c", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 4.0},
+        {"name": "n", "ph": "X", "pid": 1, "tid": 1, "ts": 10.0,
+         "dur": 5.0}]}
+    assert validate_trace(nested) == []
+
+
+def test_merge_traces_dedupes_metadata():
+    a = TraceRecorder()
+    a.sim_span("x", 0.0, 1.0)
+    b = TraceRecorder()
+    b.sim_span("y", 1.0, 2.0)
+    merged = merge_traces([a.to_json(), b.to_json()])
+    assert validate_trace(merged) == []
+    meta = [e for e in merged["traceEvents"] if e.get("ph") == "M"]
+    spans = [e for e in merged["traceEvents"] if e.get("ph") == "X"]
+    assert len(meta) == 2 and len(spans) == 2      # pids deduped once
+
+
+# ---------------------------------------------------------------------------
+# decision log / explain
+# ---------------------------------------------------------------------------
+
+def _rec(phase="dp", runner_up=None):
+    rows = [{"node": 3, "type": "v100", "count": 2, "unit_price": 0.25,
+             "gamma": 1, "cap": 4, "u_min": 0.1, "u_max": 2.0}]
+    return decision_record(360.0, 7, 2, phase, "jax", rows,
+                           cost=0.5, payoff=1.5, rate=2.0,
+                           runner_up=runner_up)
+
+
+def test_decision_record_and_jsonl_roundtrip(tmp_path):
+    log = obs.DecisionLog()
+    log.record(_rec())
+    log.record(_rec(phase="backfill",
+                    runner_up={"kind": "pack", "node": 5, "payoff": 1.2}))
+    path = tmp_path / "d.jsonl"
+    log.save_jsonl(str(path))
+    back = load_jsonl(str(path))
+    assert back == log.decisions
+    assert back[0]["utility"] == pytest.approx(2.0)   # payoff + cost
+    summ = summarize_decisions(back)
+    assert summ["decisions"] == 2 and summ["jobs"] == 1
+    assert summ["by_phase"] == {"backfill": 1, "dp": 1}
+    assert summ["gpu_units_by_key"] == {"3/v100": 4}
+
+
+def test_explain_allocation_renders_all_sections():
+    txt = explain_allocation(_rec(
+        runner_up={"kind": "spread", "prefix": 2, "n_servers": 3,
+                   "payoff": 1.0}))
+    assert "job 7" in txt and "2x v100 on node 3" in txt
+    assert "Eq.5: gamma 1/4" in txt
+    assert "spread across 3 servers" in txt and "lost by 0.5" in txt
+    none_txt = explain_allocation(_rec())
+    assert "runner-up: none" in none_txt
+
+
+# ---------------------------------------------------------------------------
+# observer lifecycle
+# ---------------------------------------------------------------------------
+
+def test_session_installs_and_restores(tmp_path):
+    assert obs.get() is obs.NULL and not obs.enabled()
+    tpath = tmp_path / "t.json"
+    dpath = tmp_path / "d.jsonl"
+    mpath = tmp_path / "m.json"
+    with obs.session(trace_path=str(tpath), decisions_path=str(dpath),
+                     metrics_path=str(mpath)) as ob:
+        assert obs.get() is ob and obs.enabled()
+        ob.count("x")
+        ob.observe("lat", 0.01)
+        ob.decision(_rec())
+        with ob.consult("events", "hadar", 0.0, 3):
+            pass
+    assert obs.get() is obs.NULL
+    assert validate_trace(json.loads(tpath.read_text())) == []
+    assert len(load_jsonl(str(dpath))) == 1
+    summary = json.loads(mpath.read_text())
+    assert summary["counters"]["x"] == 1
+    assert summary["counters"]["consults"] == 1
+    assert summary["histograms"]["decision_latency_s"]["count"] == 1
+
+
+def test_null_observer_hooks_are_cheap_noops():
+    nul = obs.NULL
+    assert nul.trace is None and nul.metrics is None \
+        and nul.decisions is None
+    with nul.consult("events", "hadar", 0.0, 0) as sw:
+        pass
+    assert sw.seconds >= 0.0
+    nul.close()                          # no-op
+
+
+def test_kernel_shape_counts_distinct_shapes_once():
+    ob = obs.Observer(trace=False, decisions=False)
+    ob.kernel_shape((5, 3, 0.1, 8, 15, 4))
+    ob.kernel_shape((5, 3, 0.1, 8, 15, 4))
+    ob.kernel_shape((5, 3, 0.1, 16, 15, 4))
+    assert ob.metrics.counter("jax_recompiles").value == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args):
+    repo = Path(__file__).resolve().parent.parent
+    env_path = str(repo / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.obs", *args],
+        capture_output=True, text=True, cwd=str(repo),
+        env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_summarize_and_merge(tmp_path):
+    tr = TraceRecorder()
+    tr.sim_span("interval", 0.0, 10.0)
+    t1 = tmp_path / "a.json"
+    t2 = tmp_path / "b.json"
+    tr.save(str(t1))
+    tr.save(str(t2))
+    log = obs.DecisionLog()
+    log.record(_rec())
+    d = tmp_path / "d.jsonl"
+    log.save_jsonl(str(d))
+
+    out = _run_cli("summarize", str(t1), str(d), "--explain")
+    assert out.returncode == 0, out.stderr
+    assert "sim-time/interval" in out.stdout
+    assert "job 7" in out.stdout         # --explain rendering
+
+    merged = tmp_path / "m.json"
+    out = _run_cli("merge", "-o", str(merged), str(t1), str(t2))
+    assert out.returncode == 0, out.stderr
+    assert validate_trace(json.loads(merged.read_text())) == []
+
+    bad = tmp_path / "bad.json"
+    bad.write_text("{}")
+    assert _run_cli("summarize", str(bad)).returncode == 1
+    assert _run_cli("summarize",
+                    str(tmp_path / "missing.json")).returncode == 2
