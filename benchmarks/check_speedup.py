@@ -5,9 +5,10 @@ round-based path, or if the jit-batched price solver loses its edge
 over the per-job NumPy scan.
 
 Usage:
-  python benchmarks/check_speedup.py            # gate against baselines
-  python benchmarks/check_speedup.py --record   # re-record the baselines
-  python benchmarks/check_speedup.py --quick    # smoke over a tiny trace
+  python benchmarks/check_speedup.py             # gate against baselines
+  python benchmarks/check_speedup.py --record    # re-record the baselines
+  python benchmarks/check_speedup.py --quick     # smoke over a tiny trace
+  python benchmarks/check_speedup.py --calibrate # record solver crossovers
 
 To stay machine-independent, the gates compare *normalized* numbers:
 
@@ -30,6 +31,20 @@ To stay machine-independent, the gates compare *normalized* numbers:
   gate also re-checks decision equality job by job.  When jax is not
   importable the jit gate is skipped with a notice (the committed
   baseline documents the container result).
+- the commit gate (baseline_fig5_commit.json) runs the *end-to-end*
+  greedy ``dp_allocation`` (pricing + wave/scan commit) over the full
+  n=2048 fig5 queue under ``solver="jax"`` and under the sequential
+  NumPy loop in the same process: the device commit must be >= 2x
+  faster (acceptance bar), bit-identical in every decision, and must
+  not regress more than 2x against the recorded ratio.
+
+``--calibrate`` measures the two ``auto``-dispatch crossovers on this
+machine — the queue size where the fused pricing kernel starts beating
+the per-job NumPy scan, and the greedy-queue size where the wave/scan
+commit starts beating the sequential loop — and records them into the
+committed ``src/repro/core/solver_calibration.json`` consumed by
+``repro.core.batch_solver`` (``REPRO_SOLVER_THRESHOLD`` still overrides
+the pricing threshold at runtime).
 
 ``--quick`` runs a seconds-scale smoke over a tiny trace: both engines
 and the HadarE backend must complete every job and agree within the
@@ -65,6 +80,13 @@ SPARSE_N_JOBS = 32
 SPARSE_ROUND_LEN = 60.0
 JIT_N_JOBS = 1024
 JIT_MIN_SPEEDUP = 3.0           # batched solver vs per-job NumPy scan
+COMMIT_BASELINE = os.path.join(os.path.dirname(__file__),
+                               "baseline_fig5_commit.json")
+COMMIT_N_JOBS = 2048
+COMMIT_MIN_SPEEDUP = 2.0        # end-to-end greedy commit vs NumPy loop
+# --calibrate sweeps (queue sizes, ascending)
+AUTO_SWEEP = (4, 8, 12, 16, 24, 32, 48)
+COMMIT_SWEEP = (24, 48, 96, 192, 384)
 
 
 def _best_round(mk_sched, jobs_factory, cluster) -> float:
@@ -169,6 +191,145 @@ def measure_jit(n_jobs=JIT_N_JOBS, repeats=REPEATS):
             "mismatches": mismatches}
 
 
+def measure_commit(n_jobs=COMMIT_N_JOBS, repeats=2):
+    """End-to-end greedy ``dp_allocation`` at ``n_jobs``: pricing plus
+    the wave/scan device commit (``solver="jax"``) vs the sequential
+    per-job NumPy loop, fresh ``PriceState`` per run, same process.
+    Returns wall clocks, the speedup ratio, and the decision-mismatch
+    count (must be 0 — the commit path is bit-identical by contract)."""
+    from benchmarks.fig5_scalability import grown_cluster
+    from repro.core.dp import dp_allocation
+    from repro.core.pricing import PriceState
+    from repro.core.trace import philly_trace
+    from repro.core.utility import effective_throughput
+
+    cluster = grown_cluster(n_jobs)
+    jobs = philly_trace(n_jobs=n_jobs, seed=1, types=cluster.gpu_types)
+
+    def run(solver):
+        ps = PriceState(cluster, jobs, 7 * 24 * 3600.0,
+                        effective_throughput, 0.0)
+        with StopWatch() as sw:
+            sel = dp_allocation(jobs, None, ps, 0.0,
+                                effective_throughput, solver=solver)
+        return sw.seconds, sel
+
+    run("jax")                              # compile warmup
+    best_np = best_jx = float("inf")
+    sel_np = sel_jx = {}
+    for _ in range(repeats):
+        t, sel_np = run("numpy")
+        best_np = min(best_np, t)
+        t, sel_jx = run("jax")
+        best_jx = min(best_jx, t)
+    if set(sel_np) != set(sel_jx):
+        mismatches = len(set(sel_np) ^ set(sel_jx))
+    else:
+        mismatches = sum(
+            1 for k in sel_np
+            if (sel_np[k].alloc, sel_np[k].cost, sel_np[k].payoff,
+                sel_np[k].rate)
+            != (sel_jx[k].alloc, sel_jx[k].cost, sel_jx[k].payoff,
+                sel_jx[k].rate))
+    return {"n_jobs": n_jobs, "numpy_s": best_np, "jax_s": best_jx,
+            "speedup": best_np / max(best_jx, 1e-9),
+            "selected": len(sel_np), "mismatches": mismatches}
+
+
+def _suffix_crossover(rows, fallback):
+    """Smallest sweep size from which the device path never loses
+    (suffix-win rule — one noisy small point cannot drag the threshold
+    down); ``fallback`` when the device path never sustains a win."""
+    best = None
+    for row in reversed(rows):
+        if row["jax_s"] <= row["numpy_s"]:
+            best = row["n_jobs"]
+        else:
+            break
+    return best if best is not None else fallback
+
+
+def calibrate() -> None:
+    """Measure the two ``auto``-dispatch crossovers on this machine and
+    record them into the committed calibration JSON (consumed by
+    ``repro.core.batch_solver``; the ``REPRO_SOLVER_THRESHOLD`` env var
+    still overrides the pricing threshold at runtime)."""
+    from repro.core import batch_solver as bs
+    from benchmarks.fig5_scalability import grown_cluster
+    from repro.core.dp import _find_alloc_arrays, dp_allocation
+    from repro.core.pricing import PriceState
+    from repro.core.trace import philly_trace
+    from repro.core.utility import effective_throughput
+
+    if not bs.HAS_JAX:
+        print("cannot calibrate: jax unavailable on this host")
+        raise SystemExit(2)
+
+    def state(n):
+        cluster = grown_cluster(n)
+        jobs = philly_trace(n_jobs=n, seed=1, types=cluster.gpu_types)
+        ps = PriceState(cluster, jobs, 7 * 24 * 3600.0,
+                        effective_throughput, 0.0)
+        return cluster, jobs, ps
+
+    pricing_rows = []
+    for n in AUTO_SWEEP:
+        _, jobs, ps = state(n)
+        avail = ps.free_arr.copy()
+        gamma = ps.gamma_arr.copy()
+        bs.find_alloc_batch(jobs, avail, gamma, ps, 0.0,
+                            effective_throughput)       # compile warmup
+        t_np = t_jx = float("inf")
+        for _ in range(REPEATS):
+            with StopWatch() as sw:
+                for j in jobs:
+                    _find_alloc_arrays(j, avail, gamma, ps, 0.0,
+                                       effective_throughput, False)
+            t_np = min(t_np, sw.seconds)
+            with StopWatch() as sw:
+                bs.find_alloc_batch(jobs, avail, gamma, ps, 0.0,
+                                    effective_throughput)
+            t_jx = min(t_jx, sw.seconds)
+        pricing_rows.append({"n_jobs": n, "numpy_s": t_np, "jax_s": t_jx})
+        print(f"pricing n={n}: numpy {t_np * 1e3:.2f}ms "
+              f"jax {t_jx * 1e3:.2f}ms")
+
+    commit_rows = []
+    for n in COMMIT_SWEEP:
+        cluster, jobs, _ = state(n)
+        t_by = {}
+        for solver in ("numpy", "jax"):
+            best = float("inf")
+            for rep in range(REPEATS + 1):
+                _, _, ps = state(n)
+                with StopWatch() as sw:
+                    dp_allocation(jobs, None, ps, 0.0,
+                                  effective_throughput, max_exact=0,
+                                  solver=solver)
+                if rep:                     # round 0 warms the compile
+                    best = min(best, sw.seconds)
+            t_by[solver] = best
+        commit_rows.append({"n_jobs": n, "numpy_s": t_by["numpy"],
+                            "jax_s": t_by["jax"]})
+        print(f"commit n={n}: numpy {t_by['numpy'] * 1e3:.2f}ms "
+              f"jax {t_by['jax'] * 1e3:.2f}ms")
+
+    doc = {
+        "auto_min_jobs": _suffix_crossover(pricing_rows,
+                                           bs.AUTO_MIN_JOBS),
+        "commit_min_jobs": _suffix_crossover(commit_rows,
+                                             bs.COMMIT_MIN_JOBS),
+        "pricing_sweep": pricing_rows,
+        "commit_sweep": commit_rows,
+    }
+    with open(bs.CALIBRATION_FILE, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
+    print(f"calibration written to {bs.CALIBRATION_FILE}: "
+          f"auto_min_jobs={doc['auto_min_jobs']} "
+          f"commit_min_jobs={doc['commit_min_jobs']}")
+
+
 def quick_smoke() -> None:
     """Tiny-trace smoke: engines + HadarE backend complete and agree."""
     from repro.core.hadar import HadarScheduler
@@ -224,6 +385,44 @@ def quick_smoke() -> None:
             f"jit smoke: {jit['mismatches']} decision mismatches"
         jit_msg = f"jit n=32 match ({jit['jit_s']*1e3:.0f}ms/call)"
 
+    # wave-commit smoke: the forced-jax greedy pass (wave partitioner +
+    # device scan) must match the sequential NumPy loop decision for
+    # decision, and report its waves through repro.obs
+    wave_msg = "wave skipped (no jax)"
+    if HAS_JAX:
+        from benchmarks.fig5_scalability import grown_cluster
+        from repro.core.dp import dp_allocation
+        from repro.core.pricing import PriceState
+        from repro.core.utility import effective_throughput
+        wcluster = grown_cluster(64)
+        wjobs = philly_trace(n_jobs=64, seed=3, types=wcluster.gpu_types)
+        sel = {}
+        waves = 0
+        for sv in ("numpy", "jax"):
+            ps = PriceState(wcluster, wjobs, 7 * 24 * 3600.0,
+                            effective_throughput, 0.0)
+            if sv == "jax":
+                with obs.session(trace=False, decisions=False) as wob:
+                    sel[sv] = dp_allocation(wjobs, None, ps, 0.0,
+                                            effective_throughput,
+                                            max_exact=0, solver=sv)
+                waves = wob.metrics.summary()["counters"].get(
+                    "solver.commit_waves", 0)
+                assert waves >= 1, "wave partitioner emitted no waves"
+            else:
+                sel[sv] = dp_allocation(wjobs, None, ps, 0.0,
+                                        effective_throughput,
+                                        max_exact=0, solver=sv)
+        assert set(sel["numpy"]) == set(sel["jax"]), \
+            "wave smoke: selections diverged"
+        for k, a in sel["numpy"].items():
+            b = sel["jax"][k]
+            assert (a.alloc, a.cost, a.payoff, a.rate) \
+                == (b.alloc, b.cost, b.payoff, b.rate), \
+                f"wave smoke: job {k} decision diverged"
+        wave_msg = (f"wave commit match (n=64, {waves} waves, "
+                    f"{len(sel['jax'])} selected)")
+
     # analysis smoke: the shipped src/ tree must lint clean against the
     # committed baseline (same gate as tests/test_analysis_gate.py)
     from repro.analysis.engine import lint_paths
@@ -239,7 +438,7 @@ def quick_smoke() -> None:
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
           f"hadare TTD {rh.total_seconds:.0f}s, {obs_msg}, {jit_msg}, "
-          f"{lint_msg}")
+          f"{wave_msg}, {lint_msg}")
 
 
 def main():
@@ -249,10 +448,16 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="seconds-scale smoke over a tiny trace; "
                          "no baseline comparison")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure the auto-dispatch crossovers and "
+                         "record src/repro/core/solver_calibration.json")
     args = ap.parse_args()
 
     if args.quick:
         quick_smoke()
+        return
+    if args.calibrate:
+        calibrate()
         return
 
     if not args.record and not os.path.exists(BASELINE):
@@ -265,6 +470,7 @@ def main():
     latency = measure_latency()
     event = measure_event()
     jit = measure_jit() if HAS_JAX else None
+    commit = measure_commit() if HAS_JAX else None
     if args.record:
         with open(BASELINE, "w") as f:
             json.dump({"n_jobs": N_JOBS, **current, "latency": latency},
@@ -274,7 +480,11 @@ def main():
         if jit is not None:
             with open(JIT_BASELINE, "w") as f:
                 json.dump(jit, f, indent=1)
-        print(f"recorded baselines: {current} | {event} | {jit}")
+        if commit is not None:
+            with open(COMMIT_BASELINE, "w") as f:
+                json.dump(commit, f, indent=1)
+        print(f"recorded baselines: {current} | {event} | {jit} | "
+              f"{commit}")
         return
 
     failed = False
@@ -369,6 +579,39 @@ def main():
                 failed = True
         else:
             print(f"no jit baseline at {JIT_BASELINE}; "
+                  f"run with --record to add one")
+
+    # ---- end-to-end greedy commit gate ----------------------------------
+    if commit is None:
+        print("commit gate skipped: jax unavailable on this host "
+              f"(committed baseline at {COMMIT_BASELINE} documents the "
+              f"container result)")
+    else:
+        print(f"greedy commit: jax {commit['jax_s']:.3f}s vs numpy loop "
+              f"{commit['numpy_s']:.3f}s at n={commit['n_jobs']} "
+              f"({commit['speedup']:.2f}x, {commit['selected']} selected,"
+              f" {commit['mismatches']} mismatches)")
+        if commit["mismatches"]:
+            print("FAIL: device commit decisions diverged from the "
+                  "NumPy oracle")
+            failed = True
+        if commit["speedup"] < COMMIT_MIN_SPEEDUP:
+            print(f"FAIL: commit speedup {commit['speedup']:.2f}x below "
+                  f"the {COMMIT_MIN_SPEEDUP}x acceptance bar")
+            failed = True
+        if os.path.exists(COMMIT_BASELINE):
+            with open(COMMIT_BASELINE) as f:
+                cbase = json.load(f)
+            cratio = cbase["speedup"] / max(commit["speedup"], 1e-9)
+            print(f"commit speedup {commit['speedup']:.2f}x vs baseline "
+                  f"{cbase['speedup']:.2f}x — regression ratio "
+                  f"{cratio:.2f}x (margin {MAX_REGRESSION}x)")
+            if cratio > MAX_REGRESSION:
+                print(f"FAIL: commit advantage regressed "
+                      f">{MAX_REGRESSION}x vs baseline")
+                failed = True
+        else:
+            print(f"no commit baseline at {COMMIT_BASELINE}; "
                   f"run with --record to add one")
 
     if failed:

@@ -472,7 +472,12 @@ class DeterminismPass(LintPass):
 
 class RecompileHazardPass(LintPass):
     name = "recompile-hazard"
-    codes = ("RA401", "RA402", "RA403")
+    codes = ("RA401", "RA402", "RA403", "RA404")
+
+    # RA404 applies to the decision-path kernels only: that's where
+    # large persistent device buffers cross the jit boundary every
+    # scheduling round
+    DONATE_SCOPE = "src/repro/core/*"
 
     def run(self, mod: Module) -> List[Finding]:
         out: List[Finding] = []
@@ -498,6 +503,22 @@ class RecompileHazardPass(LintPass):
                         "jax.jit(f)(...) invoked inline: the compiled "
                         "artifact is dropped after one call — bind the "
                         "jitted callable once and reuse it"))
+                # RA404: decision-path jit without buffer donation.
+                if dotted_name(node.func, mod.aliases) in ("jax.jit",
+                                                           "jit") \
+                        and fnmatch.fnmatch(mod.path,
+                                            self.DONATE_SCOPE) \
+                        and not any(kw.arg == "donate_argnums"
+                                    for kw in node.keywords):
+                    out.append(mod.finding(
+                        "RA404", self.name, node,
+                        "jax.jit without donate_argnums in a "
+                        "decision-path kernel: large device operand "
+                        "buffers are copied on every dispatch — donate "
+                        "single-use carry/state buffers, or baseline "
+                        "with a justification where operands are "
+                        "persistent cached views that must survive the "
+                        "call"))
             # RA402: kernel dispatch without padding-bucket quantization.
             if isinstance(node.func, ast.Name) \
                     and node.func.id in KERNEL_GETTERS:
@@ -575,7 +596,8 @@ PASS_DOC = {
     "determinism": "RA301 unstable argsort, RA302 set iteration, "
                    "RA303 global np.random, RA304 hardcoded RNG seed",
     "recompile-hazard": "RA401 jit-in-loop, RA402 kernel dispatch without "
-                        "bucket_size padding, RA403 inline jax.jit(f)(x)",
+                        "bucket_size padding, RA403 inline jax.jit(f)(x), "
+                        "RA404 core-kernel jit without donate_argnums",
     "timing-instrumentation": "RA501 ad-hoc time.perf_counter()/time.time() "
                               "in repro/ outside repro/obs",
 }

@@ -61,7 +61,10 @@ always host-exact regardless.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -80,13 +83,69 @@ except Exception:  # pragma: no cover - exercised only on jax-less hosts
     enable_x64 = None
     HAS_JAX = False
 
-# queue sizes below this stay on the per-job NumPy path under
+# Default crossover points when no calibration file is present.  Queue
+# sizes below the pricing threshold stay on the per-job NumPy path under
 # solver="auto" (kernel dispatch overhead dominates tiny batches);
-# solver="jax" forces the batched path at any size.
-AUTO_MIN_JOBS = 16
+# solver="jax" forces the device path at any size.  The committed
+# calibration JSON (recorded by ``benchmarks/check_speedup.py
+# --calibrate`` on the target container) overrides these, and the
+# ``REPRO_SOLVER_THRESHOLD`` env var overrides the pricing threshold on
+# top of that.
+AUTO_MIN_JOBS = 16              # pricing crossover fallback
+COMMIT_MIN_JOBS = 96            # greedy-commit crossover fallback
 _BUCKET_MIN = 8
 
+ENV_THRESHOLD = "REPRO_SOLVER_THRESHOLD"
+CALIBRATION_FILE = os.path.join(os.path.dirname(__file__),
+                                "solver_calibration.json")
+
 _KERNELS: Dict = {}
+_COMMIT_KERNELS: Dict = {}
+_calibration: Optional[Dict] = None
+
+
+def load_calibration(path: Optional[str] = None,
+                     refresh: bool = False) -> Dict:
+    """The committed solver-crossover calibration, cached per process.
+
+    Missing/unreadable file degrades to the module defaults — the
+    calibration only moves dispatch thresholds, never decisions."""
+    global _calibration
+    if path is None and _calibration is not None and not refresh:
+        return _calibration
+    cal = {"auto_min_jobs": AUTO_MIN_JOBS,
+           "commit_min_jobs": COMMIT_MIN_JOBS}
+    try:
+        with open(path or CALIBRATION_FILE, "r", encoding="utf-8") as fh:
+            doc = json.load(fh)
+        for k in ("auto_min_jobs", "commit_min_jobs"):
+            if isinstance(doc.get(k), (int, float)) and doc[k] >= 1:
+                cal[k] = int(doc[k])
+    except (OSError, ValueError):
+        pass
+    if path is None:
+        _calibration = cal
+    return cal
+
+
+def solver_threshold() -> int:
+    """Pricing crossover: smallest queue the ``auto`` backend sends to
+    the fused device kernel.  ``REPRO_SOLVER_THRESHOLD`` overrides the
+    calibration JSON; a malformed value fails loudly."""
+    raw = os.environ.get(ENV_THRESHOLD, "").strip()
+    if raw:
+        try:
+            return max(1, int(raw))
+        except ValueError:
+            raise ValueError(
+                f"{ENV_THRESHOLD}={raw!r} is not an integer")
+    return load_calibration()["auto_min_jobs"]
+
+
+def commit_threshold() -> int:
+    """Greedy-commit crossover: smallest greedy queue the ``auto``
+    backend routes through the wave/scan commit path."""
+    return load_calibration()["commit_min_jobs"]
 
 
 def to_device(arr: np.ndarray):
@@ -96,26 +155,64 @@ def to_device(arr: np.ndarray):
         return jnp.asarray(arr)
 
 
+def check_solver(solver: Optional[str]) -> str:
+    """Validate a ``solver`` flag name without touching backend
+    availability — the engines fail fast on typos at their entry point
+    instead of deep inside the dual subroutine."""
+    mode = solver or "auto"
+    if mode not in ("jax", "numpy", "auto"):
+        raise ValueError(f"unknown solver {solver!r} "
+                         "(expected 'jax', 'numpy', or 'auto')")
+    return mode
+
+
 def resolve_solver(solver: Optional[str]) -> str:
     """Map a ``solver`` flag (None/'auto'/'jax'/'numpy') to the backend
     that will run: auto-detect prefers jax when importable."""
-    mode = solver or "auto"
+    mode = check_solver(solver)
     if mode == "auto":
         return "jax" if HAS_JAX else "numpy"
-    if mode not in ("jax", "numpy"):
-        raise ValueError(f"unknown solver {solver!r} "
-                         "(expected 'jax', 'numpy', or 'auto')")
     if mode == "jax" and not HAS_JAX:
         raise RuntimeError("solver='jax' requested but jax is unavailable")
     return mode
 
 
+def resolve_backend(solver: Optional[str], n_jobs: int) -> str:
+    """The backend a queue of ``n_jobs`` actually runs on: applies the
+    calibrated ``auto`` crossover (see :func:`solver_threshold`) on top
+    of :func:`resolve_solver`, and logs the chosen crossover through
+    ``repro.obs`` so traces show which side of the threshold a consult
+    landed on."""
+    mode = check_solver(solver)
+    if mode == "auto":
+        thr = solver_threshold()
+        backend = "jax" if (HAS_JAX and n_jobs >= thr) else "numpy"
+    else:
+        thr = None
+        backend = resolve_solver(mode)
+    _ob = _obs.get()
+    if _ob.enabled:
+        if thr is not None:
+            _ob.gauge("solver.auto_min_jobs", thr)
+        _ob.instant("solver.resolve", backend=backend, n_jobs=n_jobs,
+                    threshold=thr)
+    return backend
+
+
 def use_batch(solver: Optional[str], n_jobs: int) -> bool:
     """Should this call take the batched device path?  Purely a
     performance dispatch — both paths return bit-identical decisions."""
-    mode = solver or "auto"
+    return n_jobs > 0 and resolve_backend(solver, n_jobs) == "jax"
+
+
+def use_commit(solver: Optional[str], n_jobs: int) -> bool:
+    """Should ``dp_allocation``'s greedy pass take the device commit
+    path (wave partitioner + ``lax.scan`` loop)?  The crossover is
+    calibrated separately from the pricing threshold — the commit path
+    amortizes differently (one scan dispatch vs J kernel replays)."""
+    mode = check_solver(solver)
     if mode == "auto":
-        return HAS_JAX and n_jobs >= AUTO_MIN_JOBS
+        return HAS_JAX and n_jobs >= commit_threshold()
     return resolve_solver(mode) == "jax" and n_jobs > 0
 
 
@@ -136,13 +233,13 @@ def _build_kernel(N: int, R: int, comm_frac: float):
     batched mergesort is both faster than XLA's CPU sort and bitwise the
     reference operation); everything downstream — feasibility prefixes,
     packed take counts and costs, per-prefix spread eligibility, costs,
-    server counts — is fused here.  Scatters are avoided: (node, rank)
-    aggregation is a static one-hot contraction (exact — each output cell
-    has at most one contributing key), and the chosen spread units are
+    server counts — is fused here.  (node, rank) aggregation is a
+    batched scatter-add (exact — each output cell has at most one
+    contributing key per job), and the chosen spread units are
     re-derived in the original (key, unit) layout from the W-th eligible
     element's (ratio, flat-index) threshold, which is elementwise."""
 
-    def per_job(avail, P, cumP, node1h, node_row, W, Kj, rank,
+    def per_job(avail, P, cumP, node_row, W, Kj, rank,
                 u_tab, single_node, s_rank, s_valid, s_price, s_ratio,
                 s_flat, ratio_o):
         M, C = P.shape
@@ -150,15 +247,14 @@ def _build_kernel(N: int, R: int, comm_frac: float):
         Wf = W
         Wi = W.astype(jnp.int32)
         usable = rank < Kj
-        rank1h = (rank[:, None] == jnp.arange(R + 1)[None, :]).astype(
-            P.dtype)
 
         # ---- consolidated (line 24): keys into (node, rank) layout -----
         # (node, rank) cells have at most one contributing key per job, so
-        # the one-hot contraction is an exact scatter, in matmul form
+        # the scatter-add is exact in any accumulation order — and O(M)
+        # instead of the dense one-hot contraction's O(N*M) per job
         av_use = jnp.where(usable, avail, 0.0)
-        A = jnp.einsum("nm,mr->nr", node1h.T,
-                       rank1h * av_use[:, None])[:, :R]
+        A = jnp.zeros((N, R + 1), P.dtype).at[
+            node_row, rank].add(av_use)[:, :R]
         Apos = jnp.maximum(A, 0.0)
         # unrolled prefix sums over the (small, static) rank axis keep the
         # accumulation order identical to NumPy's sequential cumsum
@@ -185,7 +281,7 @@ def _build_kernel(N: int, R: int, comm_frac: float):
                       jnp.take_along_axis(cumP, t_key[:, None],
                                           axis=1)[:, 0],
                       0.0)
-        vs = jnp.einsum("nm,mr->nr", node1h.T, rank1h * v[:, None])
+        vs = jnp.zeros((N, R + 1), P.dtype).at[node_row, rank].add(v)
         packed_cost = vs[:, 0]
         for k in range(1, R):
             packed_cost = packed_cost + vs[:, k]
@@ -215,7 +311,7 @@ def _build_kernel(N: int, R: int, comm_frac: float):
                                  | ((ratio_o == tau)
                                     & (flat_grid <= fstar)))
             cnt = jnp.sum(chosen_o, axis=1, dtype=jnp.int32)
-            node_cnt = jnp.einsum("m,mn->n", cnt.astype(P.dtype), node1h)
+            node_cnt = jnp.zeros((N,), jnp.int32).at[node_row].add(cnt)
             nserv = jnp.sum((node_cnt > 0).astype(jnp.int32))
             u_jmax = u_tab[jnp.maximum(jmax, 0)]
             cost2 = cost2 + jnp.where(
@@ -235,7 +331,7 @@ def _build_kernel(N: int, R: int, comm_frac: float):
                 jnp.stack(nserv_l), jnp.stack(counts_l))
 
     return jax.jit(jax.vmap(
-        per_job, in_axes=(None, None, None, None, None, 0, 0, 0, 0, 0,
+        per_job, in_axes=(None, None, None, None, 0, 0, 0, 0, 0,
                           0, 0, 0, 0, 0, 0)))
 
 
@@ -249,34 +345,30 @@ def _get_kernel(N: int, R: int, comm_frac: float):
     return _KERNELS[key]
 
 
-def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
-                     ps, now: float, utility, force: bool = False,
-                     avail_dev=None) -> List:
-    """Standalone FIND_ALLOC candidates for every job in ``jobs`` against
-    one shared cluster state — the batched equivalent of calling
-    ``repro.core.dp._find_alloc_arrays`` per job.
+@dataclasses.dataclass
+class _JobTables:
+    """Per-job host gather tables shared by the batch pricing kernel and
+    the device commit scan (identical scalar math — Eq. 1b/line 23)."""
 
-    ``avail_dev`` may carry a cached device buffer of ``avail`` (e.g.
-    ``ps.device_view('free')``) to skip the host->device upload.
-    Returns a list aligned with ``jobs``; entries are ``Candidate`` or
-    ``None``, bit-identical to the per-job path.
-    """
-    from repro.core.dp import COMM_COST_FRAC, Candidate
+    W: np.ndarray          # (B,) gang sizes (float, integer-valued)
+    single: np.ndarray     # (B,) single-node flag
+    Kj: np.ndarray         # (B,) usable-type count
+    pref: np.ndarray       # (B, R) preference order over global types
+    x_sorted: np.ndarray   # (B, R) throughput per preference rank
+    u_tab: np.ndarray      # (B, R) U_j per preference rank
+    rank: np.ndarray       # (B, M) preference rank of each key's type
+    usable: np.ndarray     # (B, M)
+    x_key: np.ndarray      # (B, M) throughput per key (1.0 if unusable)
 
-    J = len(jobs)
-    if J == 0:
-        return []
-    if not HAS_JAX:
-        raise RuntimeError("find_alloc_batch requires jax")
 
+def _job_tables(jobs: List, ps, now: float, utility,
+                B: int) -> _JobTables:
+    """Build the per-job tables on the host with the exact per-job-path
+    scalar operations (see the decision-fidelity note above); rows at or
+    beyond ``len(jobs)`` are inert padding (W=0, Kj=0)."""
     gtypes = ps.cluster.gpu_types
-    M = len(ps.keys)
-    N = ps.n_node_rows
+    J = len(jobs)
     R = len(gtypes)
-    C = int(max(ps.cap_arr.max(initial=1.0), avail.max(initial=1.0), 1.0))
-
-    # ---- per-job gather tables (host; identical scalar math) -----------
-    B = bucket_size(J)
     W = np.zeros(B)
     W[:J] = [j.n_workers for j in jobs]
     single = np.ones(B, dtype=bool)       # padded rows: no spread
@@ -320,6 +412,75 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
     x_key = np.where(
         usable,
         x_sorted[np.arange(B)[:, None], np.minimum(rank, R - 1)], 1.0)
+    return _JobTables(W=W, single=single, Kj=Kj, pref=pref,
+                      x_sorted=x_sorted, u_tab=u_tab, rank=rank,
+                      usable=usable, x_key=x_key)
+
+
+@dataclasses.dataclass
+class BatchDetails:
+    """Host-side solver state exported by ``find_alloc_batch`` for the
+    conflict-free wave partitioner: the full candidate-payoff matrix in
+    the reference enumeration layout, the winner decode, and the tables
+    the payoff-gap bound is computed from.  All job-axis arrays are
+    sliced to the live (unpadded) queue."""
+
+    avail0: np.ndarray        # (M,) free units at solve time (copy)
+    cumP: np.ndarray          # (M, C+1) Eq. 5 unit-price prefix sums
+    u_tab: np.ndarray         # (J, R) utility per preference rank
+    rank: np.ndarray          # (J, M) preference rank of each key's type
+    usable: np.ndarray        # (J, M) rank < Kj
+    Kj: np.ndarray            # (J,) usable-type count
+    single: np.ndarray        # (J,) single-node flag (no spread slots)
+    feasible: np.ndarray      # (J, N) consolidated slot feasible
+    k_first: np.ndarray       # (J, N) first feasible preference prefix-1
+    packed_payoff: np.ndarray  # (J, N)
+    sp_ok: np.ndarray         # (J, R) spread slot live
+    sp_pay: np.ndarray        # (J, R)
+    sp_jmax: np.ndarray       # (J, R) slowest rank used by spread slot
+    sp_nserv: np.ndarray      # (J, R) servers spanned by spread slot
+    sp_counts: np.ndarray     # (J, R, M) spread take per key
+    found: np.ndarray         # (J,) a best candidate exists
+    win_pay: np.ndarray       # (J,) its payoff
+    kb: np.ndarray            # (J,) its preference prefix-1
+    slot: np.ndarray          # (J,) node row, or N for the spread slot
+    node_row: np.ndarray      # (M,) key -> node row
+
+
+def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
+                     ps, now: float, utility, force: bool = False,
+                     avail_dev=None, details: bool = False):
+    """Standalone FIND_ALLOC candidates for every job in ``jobs`` against
+    one shared cluster state — the batched equivalent of calling
+    ``repro.core.dp._find_alloc_arrays`` per job.
+
+    ``avail_dev`` may carry a cached device buffer of ``avail`` (e.g.
+    ``ps.device_view('free')``) to skip the host->device upload.
+    Returns a list aligned with ``jobs``; entries are ``Candidate`` or
+    ``None``, bit-identical to the per-job path.  With ``details=True``
+    returns ``(results, BatchDetails)`` so the wave partitioner can run
+    its safety test without re-pricing.
+    """
+    from repro.core.dp import COMM_COST_FRAC, Candidate
+
+    J = len(jobs)
+    if J == 0:
+        return ([], None) if details else []
+    if not HAS_JAX:
+        raise RuntimeError("find_alloc_batch requires jax")
+
+    gtypes = ps.cluster.gpu_types
+    M = len(ps.keys)
+    N = ps.n_node_rows
+    R = len(gtypes)
+    C = int(max(ps.cap_arr.max(initial=1.0), avail.max(initial=1.0), 1.0))
+
+    # ---- per-job gather tables (host; identical scalar math) -----------
+    B = bucket_size(J)
+    jt = _job_tables(jobs, ps, now, utility, B)
+    W, single, Kj, pref = jt.W, jt.single, jt.Kj, jt.pref
+    x_sorted, u_tab = jt.x_sorted, jt.u_tab
+    rank, usable, x_key = jt.rank, jt.usable, jt.x_key
 
     # ---- shared price tables (host NumPy: bitwise Eq. 5 prefixes) ------
     P = ps.unit_prices(np.asarray(gamma, dtype=float), C)
@@ -346,13 +507,11 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
         _ob.count("solver_batch_calls")
         # one XLA compilation per distinct dispatch-shape tuple
         _ob.kernel_shape((N, R, COMM_COST_FRAC, B, M, C))
-    node1h = (np.asarray(ps.node_row)[:, None]
-              == np.arange(N)[None, :]).astype(float)
     with enable_x64():
         avail_d = avail_dev if avail_dev is not None \
             else jnp.asarray(avf)
         out = kern(avail_d, jnp.asarray(P), jnp.asarray(cumP),
-                   jnp.asarray(node1h), ps.device_view("node_row"),
+                   ps.device_view("node_row"),
                    jnp.asarray(W), jnp.asarray(Kj), jnp.asarray(rank),
                    jnp.asarray(u_tab),
                    jnp.asarray(single), jnp.asarray(s_rank),
@@ -470,4 +629,564 @@ def find_alloc_batch(jobs: List, avail: np.ndarray, gamma: np.ndarray,
                                      cand.alloc, cand.payoff, cand.cost,
                                      forced=force,
                                      context="(find_alloc_batch)")
+    if details:
+        det = BatchDetails(
+            avail0=avf.copy(), cumP=cumP, u_tab=u_tab[:J],
+            rank=rank[:J], usable=usable[:J], Kj=Kj[:J],
+            single=single[:J], feasible=feasible[:J],
+            k_first=k_first[:J], packed_payoff=packed_payoff[:J],
+            sp_ok=sp_ok[:J], sp_pay=sp_pay[:J], sp_jmax=sp_jmax[:J],
+            sp_nserv=sp_nserv[:J], sp_counts=sp_counts[:J],
+            found=found, win_pay=win_pay, kb=kb, slot=slot,
+            node_row=np.asarray(ps.node_row))
+        return results, det
     return results
+
+
+# --------------------------------------------------------------------------
+# Conflict-free wave partitioner (greedy commit without host round-trips)
+# --------------------------------------------------------------------------
+#
+# The sequential oracle re-solves FIND_ALLOC per job at the accumulated
+# state.  A wave accepts a prefix of the commit order for which that
+# re-solve provably returns the already-known standalone winner:
+#
+# - *winner invariance*: the winner's own slot sees none of the keys
+#   committed so far in the wave (a consolidated slot sees its node's
+#   usable keys; a spread slot at prefix k sees every usable key of
+#   rank < k), so its take/cost/payoff/position are all bitwise
+#   unchanged.  A corollary: accepted winners' key sets are pairwise
+#   disjoint, so the wave delta never stacks counts on one key.
+# - *payoff-gap bound* on every affected competitor slot: committing v_m
+#   units on key m removes its v_m cheapest units (Eq. 5 prices increase
+#   with gamma), which can only shift a competitor onto *cheaper* less-
+#   preferred keys — raising its payoff by at most ``topv(m)``, the
+#   price of m's v_m most expensive free units (cumP differences).  The
+#   bound needs the utility non-increasing along the preference order
+#   (true for effective_throughput; checked per job, else the wave
+#   breaks).  Affected slots must stay strictly below the winner with a
+#   relative margin, so last-ulp float slack can never flip a decision;
+#   payoff ties against the runner-up therefore reject the prefix.
+# - feasibility/eligibility only shrink when availability shrinks, so
+#   slots dead at wave start stay dead, and a job whose standalone
+#   re-solve was rejected (mu_j <= 0) stays rejected iff no affected
+#   slot's bound can cross the admission gate.
+
+_WAVE_EPS = 1e-9         # relative strictness margin on payoff bounds
+_WAVE_MIN_RESCAN = 8     # waves consuming fewer jobs stall -> scan
+
+
+def _spread_bound(det: BatchDetails, r: int, k: int, T: np.ndarray,
+                  tv: np.ndarray, d: float, comm_frac: float) -> float:
+    """Upper bound on spread slot ``k``'s payoff after the wave delta.
+
+    The slot's raw unit cost (comm term stripped) can drop by at most
+    ``d`` (the topv sum over touched keys in its pool), and its utility
+    can rise at most to the slowest rank still guaranteed in the chosen
+    set (committed units evict a key's cheapest units first, so a key's
+    surviving chosen count is ``count - v_m``)."""
+    jmax = int(det.sp_jmax[r, k - 1])
+    nserv = int(det.sp_nserv[r, k - 1])
+    u_jmax = float(det.u_tab[r, jmax])
+    cost_incl = u_jmax - float(det.sp_pay[r, k - 1])
+    comm = comm_frac * max(u_jmax, 0.0) * (nserv - 1) if nserv > 1 \
+        else 0.0
+    unit_cost = cost_incl - comm
+    counts = det.sp_counts[r, k - 1]
+    kept = counts - np.where(T, np.minimum(counts, tv), 0)
+    mk = np.nonzero(kept > 0)[0]
+    r_keep = int(det.rank[r, mk].max()) if mk.size else 0
+    return float(det.u_tab[r, r_keep]) - (unit_cost - d)
+
+
+def _wave_safe(det: BatchDetails, r: int, T: np.ndarray, tv: np.ndarray,
+               a0: np.ndarray, comm_frac: float,
+               has_winner: bool) -> bool:
+    """Is row ``r``'s standalone outcome (its winner, or its rejection
+    when ``has_winner`` is False) provably unchanged by the wave delta
+    ``tv`` on touched keys ``T``?"""
+    kj = int(det.Kj[r])
+    if kj == 0:
+        return True                       # no usable type: None forever
+    u_row = det.u_tab[r, :kj]
+    if kj > 1 and np.any(np.diff(u_row) > 0):
+        return False                      # exotic utility: exact re-solve
+    ms = np.nonzero(T)[0]
+    rank_r = det.rank[r]
+    N = det.packed_payoff.shape[1]
+    if has_winner:
+        slot = int(det.slot[r])
+        k_win = int(det.kb[r]) + 1
+        win_is_pack = slot < N
+        if win_is_pack:
+            if np.any(det.node_row[ms] == slot):
+                return False              # winner's node was touched
+        elif np.any(rank_r[ms] < k_win):
+            return False                  # winner's spread pool touched
+        win_pay = float(det.win_pay[r])
+        bar = win_pay - _WAVE_EPS * max(1.0, abs(win_pay))
+    else:
+        slot = -1
+        k_win = 0
+        win_is_pack = False
+        bar = 0.0                         # the mu_j admission gate
+
+    # topv(m): price of key m's tv[m] most expensive free units — the
+    # largest amount a competitor's cost can drop by re-sourcing the
+    # displaced demand (cumP rows are host-exact Eq. 5 prefixes)
+    topv = det.cumP[ms, a0[ms]] - det.cumP[ms, a0[ms] - tv[ms]]
+    node_ms = det.node_row[ms]
+    for h in np.unique(node_ms):
+        if win_is_pack and h == slot:
+            continue
+        if not det.feasible[r, h]:
+            continue                      # availability only shrinks
+        bound = float(det.packed_payoff[r, h]) + float(
+            topv[node_ms == h].sum())
+        if not bound < bar - _WAVE_EPS * max(0.0, abs(bound) - 1.0):
+            return False
+    if not det.single[r]:
+        rmin = int(rank_r[ms].min())
+        for k in range(rmin + 1, kj + 1):
+            if not win_is_pack and has_winner and k == k_win:
+                continue
+            if not det.sp_ok[r, k - 1]:
+                continue                  # eligibility only shrinks
+            d = float(topv[rank_r[ms] < k].sum())
+            bound = _spread_bound(det, r, k, T, tv, d, comm_frac)
+            if not bound < bar - _WAVE_EPS * max(0.0, abs(bound) - 1.0):
+                return False
+    return True
+
+
+def _wave_accepts(det: BatchDetails, cands: List, rows: List[int],
+                  key_index: Dict) -> Tuple[List, int, np.ndarray]:
+    """Walk ``rows`` (det-row indices in commit order) accepting jobs
+    while the wave-safety test holds.  Returns ``(accepted, consumed,
+    delta)``: the accepted ``(row, Candidate)`` pairs, how many leading
+    rows were consumed (accepts + provably-still-rejected skips), and
+    the aggregated per-key commit counts of the wave."""
+    from repro.core.dp import COMM_COST_FRAC
+
+    M = det.avail0.shape[0]
+    touched = np.zeros(M, dtype=bool)
+    tv = np.zeros(M, dtype=np.int64)
+    a0 = det.avail0.astype(np.int64)
+    accepted: List = []
+    consumed = 0
+    for r in rows:
+        c = cands[r]
+        T = touched & det.usable[r]
+        if T.any() and not _wave_safe(det, r, T, tv, a0, COMM_COST_FRAC,
+                                      has_winner=c is not None):
+            break
+        consumed += 1
+        if c is None:
+            continue
+        accepted.append((r, c))
+        for key, v in c.alloc.items():
+            m = key_index[key]
+            touched[m] = True
+            tv[m] += v
+    return accepted, consumed, tv
+
+
+# --------------------------------------------------------------------------
+# Device-side commit loop: lax.scan over the conflicting remainder
+# --------------------------------------------------------------------------
+
+def _build_commit_kernel(N: int, R: int, comm_frac: float, wmax: int):
+    """One fused ``lax.scan`` running the sequential greedy commit on
+    device: each step is a full FIND_ALLOC at the carried state, and the
+    winner's take is committed into the ``(free, gamma)`` carry before
+    the next step — no host round-trip between conflicting winners.
+
+    Bitwise fidelity mirrors the batch kernel's contract: gamma stays
+    integer on the greedy path, so the step's Eq. 5 prices are *gathers*
+    from the host-exact table ``P_tab[m, u] = umin (umax/umin)^(u/cap)``
+    at index ``gamma + i`` — identical floats to the reference's
+    ``unit_prices(gamma)[m, i]`` at every step.  Packed unit costs
+    accumulate sequentially over the unit index (``np.cumsum`` order)
+    and rank-axis sums are unrolled.
+
+    The spread pool needs *no in-scan sort*: the reference's stable
+    argsort key is ``(price/throughput, m*c + i)``, each key's ratio
+    sequence is non-decreasing in the absolute unit index ``u`` (Eq. 5,
+    q >= 1), and the flat-index tie-break across keys depends only on
+    the key index (``i < c`` makes ``m`` the dominant digit) — so one
+    gamma-independent total order over the whole (key, unit) *table*,
+    computed per job with the host's stable mergesort (the bitwise
+    reference operation), is the pool order at *every* scan step.  A
+    step only applies the current validity window
+    ``gamma_m <= u < gamma_m + free_m`` as a mask in that fixed order.
+    Because a chosen prefix holds at most ``W <= wmax`` units, the step
+    extracts the first-W eligible *positions* with ``searchsorted`` on
+    the running eligibility count and evaluates cost/rank/server count
+    on the compact ``(R, wmax)`` gather — no L-sized scatter or masked
+    reduction per step (those dominated the scan's wall clock).
+    The residual spread-cost ulp caveat of the batch kernel applies
+    unchanged (masked XLA reduction feeding selection only; winner
+    fields are re-derived host-exact after the scan), and additionally
+    the mu_j admission gate compares the *device* payoff against zero,
+    so a job whose reference payoff ties 0.0 to within one ulp could
+    flip — the equivalence suites observe zero such flips.
+
+    The init carry buffers are donated (fresh uploads, never reused on
+    the host), killing the copy overhead per dispatch."""
+
+    ks = jnp.arange(1, R + 1, dtype=jnp.int32)
+    targets = jnp.arange(1, wmax + 1, dtype=jnp.int32)
+    # row-wise first-position-of-count lookup, bound once per build
+    searchsorted_rows = jax.vmap(
+        lambda c, t: jnp.searchsorted(c, t, side="left"),
+        in_axes=(0, None))
+
+    def scan_fn(free0, gamma0, P_tab, node_row, Wf, Wi, Kj,
+                single, rank, u_tab, s_m, s_u, s_rank, s_price, s_node):
+        M, C = P_tab.shape
+
+        def step(carry, xs):
+            free, gamma = carry
+            wf, wi, kj, sing, rk, ut, smj, suj, srkj, sprj, sndj = xs
+            usable = rk < kj
+            av_use = jnp.where(usable, free, 0.0)
+
+            # ---- consolidated slots (batch kernel, single job) -------
+            # (node, rank) cells have at most one contributing key, so
+            # the scatter-add is exact in any accumulation order — and
+            # O(M) per step instead of the batch kernel's dense one-hot
+            # contraction (which would cost N*M per scan step)
+            A = jnp.zeros((N, R + 1), free.dtype).at[
+                node_row, rk].add(av_use)[:, :R]
+            Apos = jnp.maximum(A, 0.0)
+            rc = jnp.zeros((N,), free.dtype)
+            pc = jnp.zeros((N,), free.dtype)
+            raw_cols, pos_cols = [], []
+            for k in range(R):
+                rc = rc + A[:, k]
+                pc = pc + Apos[:, k]
+                raw_cols.append(rc)
+                pos_cols.append(pc)
+            rawcum = jnp.stack(raw_cols, axis=1)
+            poscum = jnp.stack(pos_cols, axis=1)
+            feas_any = rawcum >= wf
+            feasible = feas_any.any(axis=1)
+            k_first = jnp.argmax(feas_any, axis=1)
+            take = jnp.clip(wf - (poscum - Apos), 0.0, Apos)
+            j_last = jnp.argmax(poscum >= wf, axis=1)
+            take_pad = jnp.concatenate(
+                [take, jnp.zeros((N, 1), free.dtype)], axis=1)
+            t_key = take_pad[node_row, rk].astype(jnp.int32)
+
+            # per-key packed cost: sequential unit accumulation over the
+            # P_tab gathers == the reference's cumsum/gather (used price
+            # indices satisfy gamma + i < cap; masked lanes clip + add 0)
+            def unit_add(i, acc):
+                col = jnp.minimum(gamma + i, C - 1)
+                p = jnp.take_along_axis(P_tab, col[:, None],
+                                        axis=1)[:, 0]
+                return acc + jnp.where(i < t_key, p, 0.0)
+            vkey = jax.lax.fori_loop(
+                0, C, unit_add, jnp.zeros((M,), free.dtype))
+            vkey = jnp.where(usable, vkey, 0.0)
+            vs = jnp.zeros((N, R + 1), free.dtype).at[
+                node_row, rk].add(vkey)
+            packed_cost = vs[:, 0]
+            for k in range(1, R):
+                packed_cost = packed_cost + vs[:, k]
+            packed_payoff = ut[j_last] - packed_cost
+
+            # ---- spread slots: fixed pool order + validity window ----
+            # the reference's chosen set for prefix k is "first W
+            # eligible units in pool order"; extract exactly those
+            # positions and gather their (key, rank, node, price)
+            win_lo = jnp.take(gamma, smj)
+            win_free = jnp.take(free, smj)
+            in_window = (suj >= win_lo) \
+                & ((suj - win_lo).astype(free.dtype) < win_free)
+            elig = in_window[None, :] & (srkj[None, :] < ks[:, None])
+            csum = jnp.cumsum(elig.astype(jnp.int32), axis=1)
+            n_elig = csum[:, -1]
+            pos = searchsorted_rows(csum, targets)    # (R, wmax)
+            posc = jnp.minimum(pos, csum.shape[1] - 1)
+            # unit j of the prefix exists iff j <= min(W, n_eligible);
+            # gathers past the end are clamped and masked by `valid`
+            valid = (targets[None, :] <= wi) \
+                & (targets[None, :] <= n_elig[:, None])
+            g_m = jnp.take(smj, posc)
+            g_pr = jnp.take(sprj, posc)
+            g_rk = jnp.take(srkj, posc)
+            g_nd = jnp.take(sndj, posc)
+            cost2 = jnp.sum(jnp.where(valid, g_pr, 0.0), axis=1)
+            jmax = jnp.max(jnp.where(valid, g_rk, -1), axis=1)
+            # distinct serving nodes among the chosen units: a unit
+            # counts iff no earlier chosen unit sits on the same node
+            # (exact integer logic on the (R, wmax, wmax) grid)
+            earlier = (jnp.arange(wmax)[None, :]
+                       < jnp.arange(wmax)[:, None])[None]
+            dup = jnp.any((g_nd[:, :, None] == g_nd[:, None, :])
+                          & valid[:, None, :] & earlier, axis=2)
+            sp_nserv = jnp.sum(
+                (valid & jnp.logical_not(dup)).astype(jnp.int32),
+                axis=1)
+            u_jmax = jnp.take(ut, jnp.maximum(jmax, 0))
+            cost2 = cost2 + jnp.where(
+                sp_nserv > 1,
+                comm_frac * jnp.maximum(u_jmax, 0.0) * (sp_nserv - 1),
+                0.0)
+            sp_ok = (n_elig >= wi) & jnp.logical_not(sing) & (ks <= kj)
+            sp_pay = u_jmax - cost2
+
+            # ---- selection: reference enumeration order, first max ---
+            live = feasible[None, :] \
+                & (k_first[None, :] == jnp.arange(R)[:, None])
+            payM = jnp.where(live, packed_payoff[None, :], -jnp.inf)
+            spread_col = jnp.where(sp_ok, sp_pay, -jnp.inf)[:, None]
+            pay = jnp.concatenate([payM, spread_col], axis=1).reshape(-1)
+            pay = jnp.where(kj > 0, pay, -jnp.inf)
+            win = jnp.argmax(pay)
+            win_pay = pay[win]
+            won = win_pay > 0.0               # mu_j gate (device float)
+            slot = win % (N + 1)
+            # spread counts only materialize for the winning prefix:
+            # one wmax-sized integer scatter (duplicate keys add)
+            k_sel = win // (N + 1)
+            sp_cnt_win = jnp.zeros((M,), jnp.int32).at[g_m[k_sel]].add(
+                valid[k_sel].astype(jnp.int32))
+            counts = jnp.where(
+                won,
+                jnp.where(slot < N,
+                          jnp.where(node_row == slot, t_key, 0),
+                          sp_cnt_win),
+                jnp.zeros((M,), jnp.int32))
+            pay2 = pay.at[win].set(-jnp.inf)
+            win2 = jnp.argmax(pay2)
+            outs = (won, win.astype(jnp.int32), counts,
+                    win2.astype(jnp.int32), pay2[win2], sp_nserv)
+            return ((free - counts.astype(free.dtype), gamma + counts),
+                    outs)
+
+        (free_f, gamma_f), ys = jax.lax.scan(
+            step, (free0, gamma0), (Wf, Wi, Kj, single, rank, u_tab,
+                                    s_m, s_u, s_rank, s_price, s_node))
+        return (free_f, gamma_f) + ys
+
+    return jax.jit(scan_fn, donate_argnums=(0, 1))
+
+
+def _get_commit_kernel(N: int, R: int, comm_frac: float, wmax: int):
+    key = (N, R, comm_frac, wmax)
+    if key not in _COMMIT_KERNELS:
+        _ob = _obs.get()
+        if _ob.enabled:
+            _ob.count("jax_kernel_builds")
+        _COMMIT_KERNELS[key] = _build_commit_kernel(N, R, comm_frac,
+                                                    wmax)
+    return _COMMIT_KERNELS[key]
+
+
+def _scan_commit(jobs: List, avail: np.ndarray, gamma: np.ndarray,
+                 ps, now: float, utility) -> Dict:
+    """Run the sequential greedy commit over ``jobs`` (already in commit
+    order) in one device scan; mutates ``avail``/``gamma`` in place and
+    returns ``{job_id: Candidate}`` for the winners.  Winner cost/
+    payoff/rate are re-derived host-exact from the per-step counts and
+    the accumulated gamma, exactly like the batch kernel's winner
+    materialization."""
+    from repro.core.dp import COMM_COST_FRAC, Candidate
+
+    J = len(jobs)
+    if J == 0:
+        return {}
+    M = len(ps.keys)
+    N = ps.n_node_rows
+    R = len(ps.cluster.gpu_types)
+    # price-table depth: unit indices reach gamma + free - 1, and the
+    # per-key sum gamma_m + free_m is invariant across the scan (commits
+    # move units from free to gamma).  gamma may legitimately exceed
+    # cap - free (externally replayed occupancy), so size on both.
+    depth = (np.asarray(gamma, dtype=float)
+             + np.asarray(avail, dtype=float)).max(initial=1.0)
+    C = int(max(ps.cap_arr.max(initial=1.0), depth, 1.0))
+    B = bucket_size(J)
+    jt = _job_tables(jobs, ps, now, utility, B)
+    # Eq. 5 gather table: gamma is integer-valued on the greedy path and
+    # every *used* unit index satisfies gamma + i < cap, so P_tab rows
+    # are bitwise the reference's unit_prices(gamma) at every scan step
+    P_tab = ps.unit_prices(np.zeros(M), C)
+    node_row = np.asarray(ps.node_row)
+
+    # fixed per-job spread-pool order over the whole (key, unit) table
+    # (gamma-independent — see the kernel docstring): NumPy's stable
+    # mergesort is the bitwise reference sort, computed once per scan
+    L = M * C
+    ratio_tab = np.where(jt.usable[:, :, None],
+                         P_tab[None, :, :] / jt.x_key[:, :, None],
+                         np.inf)
+    order = np.argsort(ratio_tab.reshape(B, L), axis=-1, kind="stable")
+    s_m = (order // C).astype(np.int32)
+    s_u = (order % C).astype(np.int32)
+    s_rank = np.take_along_axis(jt.rank, s_m, axis=1).astype(np.int32)
+    s_price = P_tab.reshape(-1)[order]
+    s_node = node_row[s_m].astype(np.int32)
+
+    # static prefix width for the compact spread gather, padded to a
+    # power of two (min 8) so recompiles stay bounded like bucket_size
+    wmax = int(max(8, 1 << (int(jt.W[:J].max(initial=1.0))
+                            - 1).bit_length()))
+    kern = _get_commit_kernel(N, R, COMM_COST_FRAC, wmax)
+    _ob = _obs.get()
+    if _ob.enabled:
+        _ob.count("solver_scan_calls")
+        _ob.observe("solver.scan_jobs", J)
+        # one XLA compile per distinct (geometry, carry/xs shape) tuple
+        _ob.kernel_shape(("commit_scan", N, R, COMM_COST_FRAC, B, M, C,
+                          wmax))
+    with enable_x64():
+        # fresh uploads: the kernel donates these carry buffers
+        free0 = jnp.asarray(np.asarray(avail, dtype=float))
+        gamma0 = jnp.asarray(np.asarray(gamma, dtype=np.int32))
+        out = kern(free0, gamma0, jnp.asarray(P_tab),
+                   ps.device_view("node_row"),
+                   jnp.asarray(jt.W),
+                   jnp.asarray(jt.W.astype(np.int32)),
+                   jnp.asarray(jt.Kj.astype(np.int32)),
+                   jnp.asarray(jt.single),
+                   jnp.asarray(jt.rank.astype(np.int32)),
+                   jnp.asarray(jt.u_tab), jnp.asarray(s_m),
+                   jnp.asarray(s_u), jnp.asarray(s_rank),
+                   jnp.asarray(s_price), jnp.asarray(s_node))
+    (free_f, gamma_f, won, win, counts, win2, win2_pay,
+     sp_nserv) = map(np.asarray, out)
+
+    node_ids = [n.node_id for n in ps.cluster.nodes]
+    results: Dict = {}
+    gam_run = np.asarray(gamma, dtype=np.int64).copy()
+    want_ru = _ob.enabled
+    for p in range(J):
+        if not won[p]:
+            continue
+        cnts = counts[p]
+        ms = np.nonzero(cnts)[0]
+        kbp, slotp = divmod(int(win[p]), N + 1)
+        ru = None
+        if want_ru and win2_pay[p] > -np.inf:
+            k2, s2 = divmod(int(win2[p]), N + 1)
+            if s2 < N:
+                ru = {"kind": "pack", "node": node_ids[s2],
+                      "payoff": float(win2_pay[p])}
+            else:
+                ru = {"kind": "spread", "prefix": k2 + 1,
+                      "n_servers": int(sp_nserv[p, k2]),
+                      "payoff": float(win2_pay[p])}
+        jl = int(jt.rank[p, ms].max())      # slowest rank actually used
+        if slotp < N:
+            # consolidated: cost = sum over preference ranks of the
+            # key's sequential unit-price prefix (np.cumsum order);
+            # ps.keys[m] is the reference's (node_id, gpu_type) tuple
+            cost = 0.0
+            alloc = {}
+            for m in ms[np.argsort(jt.rank[p, ms], kind="stable")]:
+                g = int(gam_run[m])
+                cnt = int(cnts[m])
+                cost += float(np.cumsum(P_tab[m, g:g + cnt])[-1])
+                alloc[ps.keys[m]] = cnt
+        else:
+            unit_m = np.repeat(ms, cnts[ms])
+            unit_i = np.concatenate([np.arange(cnts[m]) for m in ms])
+            prices = P_tab[unit_m, gam_run[unit_m] + unit_i]
+            # reference summation order == stable sort of the chosen
+            # units by (ratio, flat index)
+            o = np.lexsort((unit_m * C + unit_i,
+                            prices / jt.x_key[p, unit_m]))
+            cost = float(prices[o].sum())
+            nserv = int(np.unique(node_row[ms]).size)
+            if nserv > 1:
+                cost += COMM_COST_FRAC * max(jt.u_tab[p, jl], 0.0) \
+                    * (nserv - 1)
+            alloc = {ps.keys[m]: int(cnts[m]) for m in ms}
+        payoff = float(jt.u_tab[p, jl] - cost)
+        results[jobs[p].job_id] = Candidate(alloc, float(cost), payoff,
+                                            float(jt.x_sorted[p, jl]),
+                                            runner_up=ru)
+        gam_run[ms] += cnts[ms]
+
+    total = counts[:J].sum(axis=0)
+    avail -= total
+    gamma += total
+    from repro.analysis import invariants as _inv
+    if _inv.sanitize_enabled():
+        # the donated-carry outputs must agree with the host accounting
+        # (all quantities are integer-valued, so this is exact)
+        if not np.array_equal(free_f.astype(float),
+                              np.asarray(avail, dtype=float)):
+            _inv.violate("conservation",
+                         "scan carry free_arr diverged from host delta",
+                         max_err=float(np.abs(free_f
+                                              - np.asarray(avail)).max()))
+        for job in jobs:
+            cand = results.get(job.job_id)
+            if cand is not None:
+                _inv.check_candidate(job.job_id, job.n_workers,
+                                     cand.alloc, cand.payoff, cand.cost,
+                                     context="(scan_commit)")
+    return results
+
+
+def commit_greedy(queue: List, avail: np.ndarray, gamma: np.ndarray,
+                  ps, now: float, utility, avail_dev=None) -> Dict:
+    """The greedy pass of ``dp_allocation`` without per-job host
+    round-trips: one fused pricing dispatch ranks all standalone
+    winners, conflict-free waves commit in aggregated deltas, and the
+    conflicting remainder runs through the device-side scan.  Mutates
+    ``avail``/``gamma`` in place and returns ``{job_id: Candidate}``
+    bit-identical to the sequential NumPy loop (the equivalence
+    oracle kept verbatim in ``repro.core.dp``)."""
+    _ob = _obs.get()
+    b_us = _ob.begin() if _ob.enabled else 0.0
+    cands, det = find_alloc_batch(queue, avail, gamma, ps, now, utility,
+                                  avail_dev=avail_dev, details=True)
+    if _ob.enabled:
+        _ob.end("solver_dispatch", b_us, backend="jax",
+                queue_len=len(queue), bucket=bucket_size(len(queue)),
+                candidates=sum(1 for c in cands if c is not None))
+    # payoff *density* order (per requested device), ties in queue order
+    # — identical to the sequential loop's sort
+    dens = [(c.payoff / max(1, j.n_workers), i)
+            for i, (j, c) in enumerate(zip(queue, cands)) if c]
+    dens.sort(key=lambda t: -t[0])
+    rows = [i for _, i in dens]
+    chosen: Dict = {}
+    cur_jobs = queue
+    key_index = ps.key_index
+    while rows:
+        accepted, consumed, tv = _wave_accepts(det, cands, rows,
+                                               key_index)
+        if _ob.enabled:
+            _ob.count("solver.commit_waves")
+            _ob.observe("solver.wave_size", consumed)
+        for r, c in accepted:
+            chosen[cur_jobs[r].job_id] = c
+        if tv.any():
+            avail -= tv.astype(avail.dtype)
+            gamma += tv.astype(gamma.dtype)
+        rows = rows[consumed:]
+        if not rows:
+            break
+        rest = [cur_jobs[r] for r in rows]
+        if consumed < _WAVE_MIN_RESCAN:
+            # the wave stalled on conflicts: finish the remainder in one
+            # fused device scan (sequential re-pricing stays on device)
+            chosen.update(_scan_commit(rest, avail, gamma, ps, now,
+                                       utility))
+            break
+        b_us = _ob.begin() if _ob.enabled else 0.0
+        cands, det = find_alloc_batch(rest, avail, gamma, ps, now,
+                                      utility, details=True)
+        if _ob.enabled:
+            _ob.end("solver_dispatch", b_us, backend="jax",
+                    queue_len=len(rest), bucket=bucket_size(len(rest)),
+                    candidates=sum(1 for c in cands if c is not None))
+        cur_jobs = rest
+        rows = list(range(len(rest)))
+    return chosen

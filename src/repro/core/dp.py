@@ -27,10 +27,12 @@ mu_j gate are preserved — which the engine-equivalence tests enforce.
 ``solver`` selects the backend for the queue-wide scans: ``"jax"`` runs
 the batched device kernel (:mod:`repro.core.batch_solver`) — one fused
 call pricing every job — for the greedy path's standalone pass and the
-exact DP's empty-branch candidate scan, with the commit loop replaying
-winners through the NumPy kernel in the reference order; ``"numpy"``
-keeps the per-job path; ``"auto"``/None auto-detects (jax when
-importable and the queue is large enough to amortize dispatch).  Both
+exact DP's empty-branch candidate scan, and routes the greedy *commit*
+loop through the conflict-free wave partitioner + device-side
+``lax.scan`` (``batch_solver.commit_greedy``); ``"numpy"`` keeps the
+per-job path — the sequential loop below is the bitwise equivalence
+oracle for the device commit; ``"auto"``/None auto-detects (jax when
+importable and the queue clears the calibrated crossover).  Both
 backends produce bit-identical decisions.
 
 ``free=None`` prices against the PriceState's persistent ``free_arr``
@@ -321,9 +323,11 @@ def dp_allocation(queue: List[Job],
     arrays and commits winners incrementally — no per-job dict rebuild.
 
     ``solver`` picks the backend for the queue-wide candidate scans (see
-    module docstring); the greedy commit loop always replays winners
-    through the NumPy kernel in the reference order, so decisions are
-    backend-independent."""
+    module docstring); on the jax backend the greedy commit itself runs
+    through ``batch_solver.commit_greedy`` (conflict-free waves + a
+    device-side scan over the conflicting remainder), while the NumPy
+    path keeps the sequential re-solve loop — the bitwise equivalence
+    oracle — so decisions are backend-independent."""
     from repro.analysis import invariants as _inv
     _san = _inv.sanitize_enabled(sanitize)
     free_is_ps = free is None
@@ -331,6 +335,15 @@ def dp_allocation(queue: List[Job],
         avail0 = ps.free_arr.copy() if free_is_ps else ps.free_to_arr(free)
         avail_init = avail0.copy() if _san else None
         gamma0 = ps.gamma_arr.copy()
+        from repro.core.batch_solver import use_commit
+        if use_commit(solver, len(queue)):
+            from repro.core.batch_solver import commit_greedy
+            dev = ps.device_view("free") if free_is_ps else None
+            chosen: Dict[int, Candidate] = commit_greedy(
+                queue, avail0, gamma0, ps, now, utility, avail_dev=dev)
+            if _san:
+                _sanitize_selection(chosen, queue, ps, avail_init)
+            return chosen
         # greedy pass: highest standalone payoff first
         cands = _scan_standalone(queue, avail0, gamma0, ps, now, utility,
                                  solver, free_is_ps)
@@ -339,9 +352,11 @@ def dp_allocation(queue: List[Job],
         order = [(c.payoff / max(1, j.n_workers), j)
                  for j, c in zip(queue, cands) if c]
         order.sort(key=lambda t: -t[0])
-        chosen: Dict[int, Candidate] = {}
+        chosen = {}
         avail = avail0
         gamma = gamma0
+        # sequential commit: re-solve each winner at the accumulated
+        # state (the device commit path's bitwise equivalence oracle)
         for _, j in order:
             c = _find_alloc_arrays(j, avail, gamma, ps, now, utility,
                                    force=False)

@@ -100,8 +100,9 @@ class HadarScheduler(Scheduler):
         ps = self._ps
         self.alpha = ps.alpha()
         for j in kept:                      # running jobs pin their gammas
-            ps.commit(j.alloc)              # free_arr tracks the delta
             out[j.job_id] = j.alloc
+        # one aggregated free/gamma delta (and one sanitizer pass)
+        ps.commit_batch(j.alloc for j in kept)
 
         b_us = _ob.begin() if _ob.enabled else 0.0
         sel = dp_allocation(queue, None, ps, now, self.utility,
@@ -114,11 +115,17 @@ class HadarScheduler(Scheduler):
         extra: Dict = {}
         for jid, cand in sel.items():
             out[jid] = cand.alloc
-            if _ob.enabled:
-                self._log_decision(_ob, now, by_id[jid], cand, ps, "dp")
-            ps.commit(cand.alloc)
             for k, v in cand.alloc.items():
                 extra[k] = extra.get(k, 0) + v
+        if _ob.enabled:
+            # decision provenance snapshots each winner's Eq. 5 prices
+            # at its *pre-commit* gamma, so the obs path keeps the
+            # sequential log-then-commit interleaving
+            for jid, cand in sel.items():
+                self._log_decision(_ob, now, by_id[jid], cand, ps, "dp")
+                ps.commit(cand.alloc)
+        else:
+            ps.commit_batch(cand.alloc for cand in sel.values())
 
         if self.work_conserving:
             # backfill: waiting jobs onto idle devices, best payoff first.

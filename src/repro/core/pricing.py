@@ -303,6 +303,42 @@ class PriceState:
         if self._sanitize:
             _inv.check_price_state(self, "after commit")
 
+    def commit_batch(self, allocs) -> None:
+        """Commit a whole wave of winner allocations in one aggregated
+        free/gamma delta.
+
+        Semantically identical to calling :meth:`commit` once per
+        allocation (integer adds commute), but the sanitizer runs a
+        *single* conservation check on the aggregate instead of one per
+        job — the accounting contract of the conflict-free wave commit
+        in ``repro.core.batch_solver.commit_greedy``."""
+        allocs = [a for a in allocs if a]
+        if not allocs:
+            return
+        _ob = _obs.get()
+        if _ob.enabled:
+            _ob.price_op("commit_batch",
+                         sum(len(a) for a in allocs))
+            _ob.observe("pricing.commit_batch_size", len(allocs))
+        total: Dict[Tuple[int, str], int] = {}
+        for alloc in allocs:
+            for key, c in alloc.items():
+                total[key] = total.get(key, 0) + c
+        if self._sanitize:
+            _inv.check_commit_amounts(self, total, "commit_batch")
+        self._in_managed_op = True
+        try:
+            for key, c in total.items():
+                self.gamma[key] = self.gamma.get(key, 0) + c
+                m = self.key_index.get(key)
+                if m is not None:
+                    self.free_arr[m] -= c
+        finally:
+            self._in_managed_op = False
+        self._touch("free")
+        if self._sanitize:
+            _inv.check_price_state(self, "after commit_batch")
+
     def release(self, alloc: Dict[Tuple[int, str], int]) -> None:
         _ob = _obs.get()
         if _ob.enabled:

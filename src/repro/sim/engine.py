@@ -90,9 +90,14 @@ def _reset_jobs(jobs: List[Job]) -> None:
 def _apply_solver(scheduler, solver: Optional[str]) -> None:
     """Engine-level pricing-backend override: forwarded to schedulers
     that expose a ``solver`` flag (Hadar's batched dual subroutine);
-    silently ignored for solver-less baselines."""
-    if solver is not None and hasattr(scheduler, "solver"):
-        scheduler.solver = solver
+    silently ignored for solver-less baselines.  The flag name is
+    validated here — a typo fails at the engine entry point, not deep
+    inside the dual subroutine thousands of events later."""
+    if solver is not None:
+        from repro.core.batch_solver import check_solver
+        check_solver(solver)
+        if hasattr(scheduler, "solver"):
+            scheduler.solver = solver
 
 
 def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,

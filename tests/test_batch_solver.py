@@ -19,8 +19,9 @@ except ModuleNotFoundError:  # offline CI image — vendored fallback
     from _hypothesis_compat import given, settings, strategies as st
 
 import _seed_reference as ref
-from repro.core.batch_solver import (AUTO_MIN_JOBS, HAS_JAX, bucket_size,
-                                     resolve_solver, use_batch)
+from repro.core.batch_solver import (HAS_JAX, bucket_size,
+                                     resolve_solver, solver_threshold,
+                                     use_batch)
 from repro.core.dp import _find_alloc_arrays, dp_allocation, find_alloc
 from repro.core.hadar import HadarScheduler
 from repro.core.pricing import PriceState
@@ -75,8 +76,10 @@ def test_resolve_and_dispatch_rules():
     if HAS_JAX:
         assert resolve_solver("auto") == "jax"
         assert use_batch("jax", 1)
-        assert not use_batch("auto", AUTO_MIN_JOBS - 1)
-        assert use_batch("auto", AUTO_MIN_JOBS)
+        # the auto crossover comes from the calibration JSON (env var
+        # overrides notwithstanding), not a hard-coded constant
+        assert not use_batch("auto", solver_threshold() - 1)
+        assert use_batch("auto", solver_threshold())
 
 
 def test_bucket_size_powers_of_two():
