@@ -22,6 +22,12 @@ To stay machine-independent, the gates compare *normalized* numbers:
   gate enforces the absolute acceptance bar — event wall-clock at most
   1/5 of the round path — plus a 2x regression margin on the recorded
   ratio.
+- the fault gate (baseline_event_faults.json) replays the same sparse
+  trace with a seeded failure schedule (background MTBF windows plus a
+  deterministic all-nodes blip that forces at least one eviction): the
+  fault path must stay within 1.5x of the fault-free event wall-clock
+  in the same process, report goodput strictly below GRU, and not
+  regress more than 2x against the recorded overhead ratio.
 - the jit gate (baseline_fig5_jit.json) prices the whole n=1024 fig5
   queue through ``find_alloc_batch`` (one fused call, post-compile) and
   through the per-job NumPy greedy scan in the same process: the batched
@@ -84,6 +90,12 @@ COMMIT_BASELINE = os.path.join(os.path.dirname(__file__),
                                "baseline_fig5_commit.json")
 COMMIT_N_JOBS = 2048
 COMMIT_MIN_SPEEDUP = 2.0        # end-to-end greedy commit vs NumPy loop
+FAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                              "baseline_event_faults.json")
+FAULT_MAX_OVERHEAD = 1.5        # fault path vs fault-free event engine
+FAULT_MTBF_HOURS = 240.0
+FAULT_SEED = 7
+FAULT_BLIP_S = 900.0            # deterministic all-nodes outage length
 # --calibrate sweeps (queue sizes, ascending)
 AUTO_SWEEP = (4, 8, 12, 16, 24, 32, 48)
 COMMIT_SWEEP = (24, 48, 96, 192, 384)
@@ -143,6 +155,56 @@ def measure_event(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN):
     rows = measure_sparse(n_jobs, round_len, repeats=REPEATS)
     return {k: rows[k] for k in ("n_jobs", "round_len", "round_wall_s",
                                  "event_wall_s")}
+
+
+def measure_event_faults(n_jobs=SPARSE_N_JOBS, round_len=SPARSE_ROUND_LEN,
+                         repeats=REPEATS):
+    """Fault-injection overhead on the sparse fig5 trace: event-engine
+    wall-clock with a seeded MTBF failure schedule vs the fault-free
+    run, same trace, same process.  The schedule is dense enough to
+    force at least one eviction (asserted — an eviction-free run would
+    gate nothing) yet sparse enough that fault handling must stay within
+    ``FAULT_MAX_OVERHEAD`` of the fault-free wall-clock."""
+    from benchmarks.fig5_scalability import grown_cluster, sparse_trace
+    from repro.core.hadar import HadarScheduler
+    from repro.sim.engine import simulate_events
+    from repro.sim.faults import FailureModel, FailureTrace, FaultWindow
+
+    cluster = grown_cluster(n_jobs)
+    arrivals = sorted(j.arrival for j in sparse_trace(n_jobs, round_len))
+    model = FailureModel(mtbf_hours=FAULT_MTBF_HOURS, recovery_s=1800.0,
+                         seed=FAULT_SEED, horizon=arrivals[-1])
+    # deterministic blip: every node down for FAULT_BLIP_S while the
+    # first job is mid-run — guarantees the eviction whichever node the
+    # scheduler picked (sampled windows overlapping the blip dropped)
+    blip_t = arrivals[0] + 600.0
+    base = [w for w in model.sample(cluster)
+            if w.recover_time <= blip_t
+            or w.fail_time >= blip_t + FAULT_BLIP_S]
+    blip = [FaultWindow(n.node_id, blip_t, blip_t + FAULT_BLIP_S)
+            for n in cluster.nodes]
+    trace = FailureTrace(base + blip, cluster)
+
+    best_clean = best_fault = float("inf")
+    res = None
+    for _ in range(repeats):
+        jobs = sparse_trace(n_jobs, round_len)
+        with StopWatch() as sw:
+            simulate_events(HadarScheduler(), jobs, cluster,
+                            round_len=round_len)
+        best_clean = min(best_clean, sw.seconds)
+        jobs = sparse_trace(n_jobs, round_len)
+        with StopWatch() as sw:
+            res = simulate_events(HadarScheduler(), jobs, cluster,
+                                  round_len=round_len, faults=trace)
+        best_fault = min(best_fault, sw.seconds)
+    assert res.evictions >= 1, \
+        "fault benchmark produced no evictions — schedule too sparse"
+    return {"n_jobs": n_jobs, "round_len": round_len,
+            "clean_wall_s": best_clean, "fault_wall_s": best_fault,
+            "overhead": best_fault / max(best_clean, 1e-9),
+            "evictions": res.evictions, "goodput": res.goodput(),
+            "gru": res.gru_overall()}
 
 
 def measure_jit(n_jobs=JIT_N_JOBS, repeats=REPEATS):
@@ -353,6 +415,22 @@ def quick_smoke() -> None:
     rh = simulate_hadare(mix_jobs("M-3", tb), tb, round_len=90.0)
     assert all(p.finish_time is not None for p in rh.jobs), "hadare"
 
+    # fault smoke: a seeded MTBF schedule through the event engine with
+    # the sanitizer on — at least one eviction, goodput strictly below
+    # GRU, every job still completes, zero invariant violations
+    from repro.sim.faults import FailureModel
+    rf = simulate_events(HadarScheduler(), philly_trace(n_jobs=8, seed=9),
+                         cluster, round_len=L, sanitize=True,
+                         faults=FailureModel(mtbf_hours=4.0,
+                                             recovery_s=1200.0, seed=11))
+    assert rf.evictions >= 1, "fault smoke: no evictions"
+    assert rf.goodput() < rf.gru_overall(), \
+        "fault smoke: eviction cost not reflected in goodput"
+    assert all(j.finish_time is not None for j in rf.jobs), \
+        "fault smoke: jobs starved after faults"
+    fault_msg = (f"faults ok ({rf.evictions} evictions, goodput "
+                 f"{rf.goodput():.3f} < gru {rf.gru_overall():.3f})")
+
     # observability smoke: re-run the event sim with recording on — the
     # decisions must not move, and the emitted trace must schema-validate
     from repro import obs
@@ -437,8 +515,8 @@ def quick_smoke() -> None:
     print(f"quick smoke passed: round TTD {rr.total_seconds:.0f}s, "
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
-          f"hadare TTD {rh.total_seconds:.0f}s, {obs_msg}, {jit_msg}, "
-          f"{wave_msg}, {lint_msg}")
+          f"hadare TTD {rh.total_seconds:.0f}s, {fault_msg}, {obs_msg}, "
+          f"{jit_msg}, {wave_msg}, {lint_msg}")
 
 
 def main():
@@ -469,6 +547,7 @@ def main():
     current = measure()
     latency = measure_latency()
     event = measure_event()
+    faults = measure_event_faults()
     jit = measure_jit() if HAS_JAX else None
     commit = measure_commit() if HAS_JAX else None
     if args.record:
@@ -477,14 +556,16 @@ def main():
                       f, indent=1)
         with open(EVENT_BASELINE, "w") as f:
             json.dump(event, f, indent=1)
+        with open(FAULT_BASELINE, "w") as f:
+            json.dump(faults, f, indent=1)
         if jit is not None:
             with open(JIT_BASELINE, "w") as f:
                 json.dump(jit, f, indent=1)
         if commit is not None:
             with open(COMMIT_BASELINE, "w") as f:
                 json.dump(commit, f, indent=1)
-        print(f"recorded baselines: {current} | {event} | {jit} | "
-              f"{commit}")
+        print(f"recorded baselines: {current} | {event} | {faults} | "
+              f"{jit} | {commit}")
         return
 
     failed = False
@@ -547,6 +628,33 @@ def main():
             failed = True
     else:
         print(f"no event baseline at {EVENT_BASELINE}; "
+              f"run with --record to add one")
+
+    # ---- fault-injection overhead gate ----------------------------------
+    print(f"fault path: {faults['fault_wall_s']:.3f}s vs fault-free "
+          f"{faults['clean_wall_s']:.3f}s on the sparse trace "
+          f"({faults['overhead']:.2f}x, {faults['evictions']} evictions, "
+          f"goodput {faults['goodput']:.4f} < gru {faults['gru']:.4f})")
+    if faults["overhead"] > FAULT_MAX_OVERHEAD:
+        print(f"FAIL: fault-injection overhead {faults['overhead']:.2f}x "
+              f"exceeds the {FAULT_MAX_OVERHEAD}x bar")
+        failed = True
+    if not faults["goodput"] < faults["gru"]:
+        print("FAIL: eviction cost not reflected in goodput")
+        failed = True
+    if os.path.exists(FAULT_BASELINE):
+        with open(FAULT_BASELINE) as f:
+            fbase = json.load(f)
+        fratio = faults["overhead"] / max(fbase["overhead"], 1e-9)
+        print(f"fault overhead {faults['overhead']:.2f}x vs baseline "
+              f"{fbase['overhead']:.2f}x — regression ratio "
+              f"{fratio:.2f}x (margin {MAX_REGRESSION}x)")
+        if fratio > MAX_REGRESSION:
+            print(f"FAIL: fault-injection overhead regressed "
+                  f">{MAX_REGRESSION}x vs baseline")
+            failed = True
+    else:
+        print(f"no fault baseline at {FAULT_BASELINE}; "
               f"run with --record to add one")
 
     # ---- jit-batched solver gate ----------------------------------------

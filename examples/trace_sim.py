@@ -43,6 +43,10 @@ def main():
                     default="round")
     ap.add_argument("--replay", type=str, default=None,
                     help="replay a Philly/Helios-style CSV trace")
+    ap.add_argument("--faults", type=str, default=None, metavar="CSV",
+                    help="inject a failure-trace CSV (node_id, "
+                         "fail_time, recover_time, kind); results gain "
+                         "a goodput column")
     ap.add_argument("--trace", type=str, default=None, metavar="OUT",
                     help="write a Perfetto trace of the run to OUT "
                          "(repro.obs)")
@@ -52,11 +56,17 @@ def main():
     args = ap.parse_args()
 
     cluster = simulation_cluster()
+    faults = None
+    if args.faults:
+        from repro.sim.replay import load_fault_csv
+        faults = load_fault_csv(args.faults, cluster)
+        print(f"injecting {len(faults)} fault windows from {args.faults}")
     print(f"cluster: {len(cluster.nodes)} nodes, "
           f"{cluster.total_gpus()} GPUs {cluster.capacity()} "
           f"(engine: {args.engine})")
+    goodput_col = f" {'goodput':>8s} {'evict':>6s}" if faults else ""
     print(f"{'scheduler':10s} {'TTD(h)':>8s} {'GRU':>6s} {'median(h)':>10s} "
-          f"{'JCT(h)':>8s} {'restart-rounds':>14s}")
+          f"{'JCT(h)':>8s} {'restart-rounds':>14s}" + goodput_col)
     observed = args.trace or args.explain
     explain_recs = []
     for cls in (HadarScheduler, GavelScheduler, TiresiasScheduler,
@@ -70,14 +80,17 @@ def main():
             # decision log carries pricing provenance (baselines don't)
             with obs.session(trace_path=args.trace) as ob:
                 res = run_engine(cls(), jobs, cluster, mode=args.engine,
-                                 round_len=args.round_len)
+                                 round_len=args.round_len, faults=faults)
             explain_recs = ob.decisions.decisions[:N_EXPLAIN]
         else:
             res = run_engine(cls(), jobs, cluster, mode=args.engine,
-                             round_len=args.round_len)
+                             round_len=args.round_len, faults=faults)
+        goodput_val = (f" {res.goodput():8.3f} {res.evictions:6d}"
+                       if faults else "")
         print(f"{res.scheduler:10s} {res.ttd_hours:8.2f} "
               f"{res.avg_gru():6.3f} {res.median_completion()/3600:10.2f} "
-              f"{res.avg_jct()/3600:8.2f} {res.changed_round_frac():14.2f}")
+              f"{res.avg_jct()/3600:8.2f} {res.changed_round_frac():14.2f}"
+              + goodput_val)
 
     if args.trace:
         print(f"\nwrote Perfetto trace to {args.trace} "

@@ -36,6 +36,11 @@ progress-bound      done_iters is monotone and never exceeds total_iters
                     (Eq. 1 throughput integration cannot overshoot)
 sibling-disjoint    HadarE: co-trained sibling copies of one job occupy
                     distinct nodes (dedup invariant of Sec. V)
+down-alloc          failure realism: no job holds devices on a node that
+                    is currently down (eviction completeness under
+                    dynamic capacity)
+goodput-bound       goodput <= GRU: useful GPU-seconds (busy minus
+                    fault losses) can never exceed busy GPU-seconds
 ==================  =====================================================
 """
 from __future__ import annotations
@@ -274,6 +279,36 @@ def check_monotonic(t_new: float, t_prev: float, engine: str,
     if t_new < t_prev - 1e-9:
         violate("time-monotonic", f"{what} moved backwards",
                 engine=engine, t_new=t_new, t_prev=t_prev)
+
+
+def check_down_allocs(jobs, down_nodes, t: float, engine: str) -> None:
+    """down-alloc: after fault processing, no live allocation touches a
+    down node (the graceful-degradation eviction must be complete)."""
+    _tick("down_allocs")
+    if not down_nodes:
+        return
+    for job in jobs:
+        alloc = getattr(job, "alloc", None)
+        if not alloc:
+            continue
+        for (node, _gpu), count in alloc.items():
+            if count > 0 and node in down_nodes:
+                violate("down-alloc",
+                        "job allocated on a down node",
+                        engine=engine, t=t, job=job.job_id, node=node,
+                        down=sorted(down_nodes))
+
+
+def check_goodput(goodput: float, gru: float, engine: str) -> None:
+    """goodput-bound: 0 <= goodput <= overall GRU."""
+    _tick("goodput")
+    if goodput < -_EPS:
+        violate("goodput-bound", "goodput negative",
+                engine=engine, goodput=goodput)
+    if goodput > gru + _EPS:
+        violate("goodput-bound",
+                "goodput exceeds GRU (useful work cannot exceed busy "
+                "work)", engine=engine, goodput=goodput, gru=gru)
 
 
 def check_sibling_nodes(parent_id, copies, t: float) -> None:

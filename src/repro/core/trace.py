@@ -135,11 +135,13 @@ def multi_cluster(n_pods: int = 3, nodes_per_pod: int = 5,
     pod_types = pod_types or ["v100", "p100", "k80", "t4", "rtx3090"]
     rng = np.random.RandomState(seed)
     nodes: List[Node] = []
+    pods: List[List[int]] = []
     nid = 0
     for p in range(n_pods):
         r = pod_types[p % len(pod_types)]
         r_next = pod_types[(p + 1) % len(pod_types)]
         n_mixed = int(round(nodes_per_pod * mixed_frac))
+        pod_ids: List[int] = []
         for i in range(nodes_per_pod):
             if i < n_mixed and r != r_next:
                 half = max(1, gpus_per_node // 2)
@@ -148,8 +150,12 @@ def multi_cluster(n_pods: int = 3, nodes_per_pod: int = 5,
                 gpus = {r: gpus_per_node}
             nodes.append(Node(nid, gpus,
                               pcie_scaling=float(rng.choice([0.8, 1.0]))))
+            pod_ids.append(nid)
             nid += 1
-    return Cluster(nodes)
+        pods.append(pod_ids)
+    # pods metadata lets repro.sim.adapters.simulate_pods run each pod
+    # as an independent simulation (pod-local faults stay pod-local)
+    return Cluster(nodes, pods=pods)
 
 
 # ---------------------------------------------------------------------------

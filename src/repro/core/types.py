@@ -22,6 +22,9 @@ class Node:
 @dataclasses.dataclass
 class Cluster:
     nodes: List[Node]
+    # pod topology metadata (multi_cluster): list of node-id groups.
+    # Pods fail and can be simulated independently; None = single pod.
+    pods: Optional[List[List[int]]] = None
 
     @property
     def gpu_types(self) -> List[str]:
@@ -74,6 +77,8 @@ class Job:
     attained_service: float = 0.0    # GPU-seconds (Tiresias LAS)
     alloc: Optional[Alloc] = None    # current allocation
     restarts: int = 0
+    evictions: int = 0               # fault-driven involuntary restarts
+    lost_iters: float = 0.0          # progress rolled back by evictions
 
     @property
     def total_iters(self) -> float:

@@ -38,7 +38,8 @@ import os
 import time
 from typing import Optional, Set, Tuple
 
-from .explain import DecisionLog, decision_record, explain_allocation
+from .explain import (DecisionLog, decision_record, eviction_record,
+                      explain_allocation)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import SIM_PID, WALL_PID, TraceRecorder, validate_trace
 
@@ -216,6 +217,32 @@ class Observer:
             self.trace.sim_instant("completion", t,
                                    {"job": job_id, "jct_s": jct})
 
+    def fault(self, kind: str, t: float, node_id: int,
+              t_recover: Optional[float] = None) -> None:
+        """A node failure / spot preemption / recovery: per-kind
+        ``faults.*`` counter plus a sim-track outage span (when the
+        recovery time is known up front) or instant."""
+        if self.metrics is not None:
+            self.metrics.counter(f"faults.{kind}").inc()
+        if self.trace is not None:
+            if (t_recover is not None and t_recover > t
+                    and t_recover != float("inf")):
+                self.trace.sim_span(f"fault.{kind}", t, t_recover,
+                                    {"node": node_id})
+            else:
+                self.trace.sim_instant(f"fault.{kind}", t,
+                                       {"node": node_id})
+
+    def eviction(self, rec: dict) -> None:
+        """Fault-eviction provenance: counters + decision-log record
+        (``phase="eviction"``, see ``explain.eviction_record``)."""
+        if self.metrics is not None:
+            self.metrics.counter("faults.evictions").inc()
+            self.metrics.histogram("faults.lost_gpu_seconds").observe(
+                float(rec.get("lost_gpu_seconds", 0.0)))
+        if self.decisions is not None:
+            self.decisions.record(rec)
+
     def price_op(self, op: str, n_keys: int) -> None:
         """PriceState commit/release accounting."""
         if self.metrics is not None:
@@ -326,6 +353,7 @@ _install_from_env()
 __all__ = [
     "Counter", "DecisionLog", "Gauge", "Histogram", "MetricsRegistry",
     "NullObserver", "Observer", "StopWatch", "TraceRecorder",
-    "decision_record", "enabled", "explain_allocation", "get", "install",
+    "decision_record", "enabled", "eviction_record", "explain_allocation",
+    "get", "install",
     "session", "validate_trace",
 ]

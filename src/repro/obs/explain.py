@@ -73,6 +73,29 @@ def decision_record(t: float, job_id: int, n_workers: int, phase: str,
     }
 
 
+def eviction_record(t: float, job_id: int, n_workers: int, reason: str,
+                    nodes: List[int], lost_iters: float,
+                    lost_gpu_seconds: float, payoff: float,
+                    order: int) -> dict:
+    """Assemble one fault-eviction record (``phase="eviction"``).
+
+    ``reason`` is ``node_fail`` / ``spot_preempt`` / ``capacity``;
+    ``order`` is the victim's rank in the reverse-payoff eviction
+    sequence (0 = lowest marginal utility, evicted first)."""
+    return {
+        "t": float(t),
+        "job": int(job_id),
+        "workers": int(n_workers),
+        "phase": "eviction",
+        "reason": reason,
+        "nodes": [int(n) for n in nodes],
+        "lost_iters": float(lost_iters),
+        "lost_gpu_seconds": float(lost_gpu_seconds),
+        "payoff": float(payoff),
+        "order": int(order),
+    }
+
+
 def _fmt_runner_up(ru: Optional[dict], payoff: float) -> str:
     if not ru:
         return "runner-up: none (no other feasible candidate)"
@@ -88,6 +111,14 @@ def _fmt_runner_up(ru: Optional[dict], payoff: float) -> str:
 
 def explain_allocation(rec: dict) -> str:
     """Render one decision record as human-readable provenance text."""
+    if rec.get("phase") == "eviction":
+        return (
+            f"t={rec['t']:.1f}s job {rec['job']} "
+            f"({rec['workers']} workers) EVICTED: {rec.get('reason')}\n"
+            f"  nodes {rec.get('nodes')}, reverse-payoff rank "
+            f"{rec.get('order')} (payoff proxy {rec.get('payoff', 0.0):.6g})\n"
+            f"  rolled back {rec.get('lost_iters', 0.0):.6g} iters "
+            f"({rec.get('lost_gpu_seconds', 0.0):.6g} GPU-seconds lost)")
     lines = [
         f"t={rec['t']:.1f}s job {rec['job']} "
         f"({rec['workers']} workers, phase={rec['phase']}"

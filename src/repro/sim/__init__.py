@@ -37,15 +37,28 @@ Module map
   matrix ops, with steady-round fast-forward.
 - ``replay``   — Philly/Helios-style CSV trace loader/writer mapping
   real traces onto the same ``Job`` objects the synthetic generators
-  produce.
+  produce, plus the failure-trace CSV schema.
+- ``faults``   — failure realism: ``FailureModel`` (seeded MTBF / spot
+  reclaim / recovery distributions), validated ``FailureTrace``
+  windows, checkpoint-rollback cost model, and the reverse-payoff
+  eviction policy.  Fault events (NODE_FAIL / NODE_RECOVER /
+  SPOT_PREEMPT) flow through both engines and the HadarE adapter via
+  their ``faults=`` argument; results then report ``goodput()``
+  alongside GRU/CRU.
 """
 from repro.sim.engine import (RESTART_PENALTY, simulate_events,
                               simulate_rounds)
+from repro.sim.faults import (CHECKPOINT_INTERVAL, FailureModel,
+                              FailureTrace, FaultWindow)
 from repro.sim.metrics import (EventSimResult, IntervalRecord, RoundRecord,
                                SimResult)
 
 __all__ = [
+    "CHECKPOINT_INTERVAL",
     "RESTART_PENALTY",
+    "FailureModel",
+    "FailureTrace",
+    "FaultWindow",
     "simulate_events",
     "simulate_rounds",
     "EventSimResult",

@@ -29,8 +29,10 @@ from repro import obs as _obs
 from repro.core.schedulers import Scheduler
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
 from repro.sim.engine import (RESTART_PENALTY, _alloc_equal,
-                              _apply_solver, _job_penalty,
+                              _apply_solver, _job_penalty, _reset_jobs,
                               simulate_events, simulate_rounds)
+from repro.sim.faults import (KIND_SPOT, FaultState, resolve_faults,
+                              select_evictions)
 from repro.sim.metrics import RoundRecord, SimResult
 
 
@@ -94,12 +96,20 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                     scheduler=None, sync_overhead: float = 5.0,
                     fast_forward: bool = True,
                     solver: Optional[str] = None,
-                    sanitize: bool = None) -> SimResult:
+                    sanitize: bool = None,
+                    faults=None) -> SimResult:
     """Vectorized, event-aware HadarE simulation (see module docstring).
     ``jobs`` are parents; metrics are reported at parent granularity.
     ``solver`` picks the Hadar core's pricing backend ("jax" | "numpy" |
     "auto"); copies price through the same batched kernel (their
-    ``single_node`` constraint is a kernel input)."""
+    ``single_node`` constraint is a kernel input).
+
+    ``faults`` injects node failures round-quantized, like
+    ``simulate_rounds``: copies on down nodes are evicted at the round
+    boundary (progress is pooled per parent and committed per round, so
+    nothing rolls back — the sibling copies' pool keeps everything the
+    evicted copy contributed), and the extra restart penalty an evicted
+    copy pays when it reallocates is charged against goodput."""
     from repro.core.hadar import HadarScheduler
     from repro.core.hadare import _dedupe_siblings, fork_job
 
@@ -111,11 +121,12 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
     _san = _inv.sanitize_enabled(sanitize)
     cap = _cap_by_key(cluster) if _san else None
     parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-    for p in parents:
-        p.done_iters = 0.0
-        p.finish_time = None
-        p.alloc = None
-        p.restarts = 0
+    _reset_jobs(parents)
+    ftrace = resolve_faults(faults, cluster)
+    fs = FaultState(ftrace, cluster) if ftrace is not None else None
+    fault_pending: set = set()          # copy ids owing a restart charge
+    busy_total = avail_total = lost_total = 0.0
+    ev_total = 0
     P = len(parents)
     C = n_copies or len(cluster.nodes)
     n_nodes = len(cluster.nodes)
@@ -152,15 +163,52 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                 registered[i] = True
 
         live = [c for c in all_copies if not c.is_done()]
+        avail_gpus, avail_nodes = total_gpus, n_nodes
+        if fs is not None:
+            prev_down = set(fs.down)
+            if fs.advance_to(t):
+                if _ob.enabled:
+                    for h in sorted(fs.down - prev_down):
+                        win = fs.active_window(h, t)
+                        _ob.fault("spot_preempt" if win is not None
+                                  and win.kind == KIND_SPOT
+                                  else "node_fail", t, h,
+                                  win.recover_time if win else None)
+                    for h in sorted(prev_down - fs.down):
+                        _ob.fault("node_recover", t, h)
+                victims = select_evictions(live, fs.live_capacity())
+                for rank, c in enumerate(victims):
+                    payoff = (c.bottleneck_rate(c.alloc)
+                              * alloc_size(c.alloc))
+                    ev_nodes = alloc_nodes(c.alloc)
+                    c.alloc = None
+                    c.evictions += 1
+                    pi, _ci = pos[c.job_id]
+                    parents[pi].evictions += 1
+                    fault_pending.add(c.job_id)
+                    ev_total += 1
+                    if _ob.enabled:
+                        _ob.eviction(_obs.eviction_record(
+                            t, c.job_id, c.n_workers, "capacity",
+                            ev_nodes, 0.0, 0.0, payoff, rank))
+                if _san:
+                    _inv.check_down_allocs(live, fs.down, t, "hadare")
+            avail_gpus, avail_nodes = fs.up_counts()
+        view = fs.view() if fs is not None else cluster
         qlen = (sum(1 for c in live if c.alloc is None)
                 if _ob.enabled else 0)
         # the consult covers schedule + sibling dedupe, matching the
         # seed's sched_seconds accounting
-        with _ob.consult("hadare", sched.name, t, qlen) as sw:
-            desired = sched.schedule(t, round_len, live, cluster)
-            n_raw = len(desired) if _ob.enabled else 0
-            desired = _dedupe_siblings(desired, live, by_id)
-        sched_s = sw.seconds
+        if view.nodes:
+            with _ob.consult("hadare", sched.name, t, qlen) as sw:
+                desired = sched.schedule(t, round_len, live, view)
+                n_raw = len(desired) if _ob.enabled else 0
+                desired = _dedupe_siblings(desired, live, by_id)
+            sched_s = sw.seconds
+        else:
+            desired = {}                # total outage
+            n_raw = 0
+            sched_s = 0.0
         if _ob.enabled:
             _ob.sim_instant("hadare.consolidation", t, raw=n_raw,
                             kept=len(desired), copies=len(live))
@@ -180,6 +228,11 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
                     c.restarts += 1
                     parents[pi].restarts += 1
                 pen[pi, ci] = _job_penalty(c, restart_penalty) if new else 0.0
+                if new is not None and c.job_id in fault_pending:
+                    # fault-restart charge: the penalty replays work a
+                    # fault destroyed, not a scheduler-chosen move
+                    lost_total += pen[pi, ci] * alloc_size(new)
+                    fault_pending.discard(c.job_id)
             c.alloc = new
             if not new:
                 continue
@@ -246,12 +299,16 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
         n_running = int(allocated.any(axis=1).sum())
         rounds.append(RoundRecord(
             t=t,
-            gru=busy_gpu_time / (total_gpus * round_len),
-            cru=len(busy_nodes) / max(1, n_nodes),
+            gru=(busy_gpu_time / (avail_gpus * round_len)
+                 if avail_gpus > 0 else 0.0),
+            cru=(len(busy_nodes) / avail_nodes if avail_nodes > 0
+                 else 0.0),
             running=n_running,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        busy_total += busy_gpu_time
+        avail_total += avail_gpus * round_len
         if _ob.enabled:
             r = rounds[-1]
             _ob.interval("hadare", r.t, round_len, r.gru, r.cru,
@@ -286,6 +343,11 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
         k_arr = (int(np.ceil((arrivals[unreg[0]] - t) / round_len))
                  if unreg.size else k_comp)
         skip = min(k_comp - 1, k_arr, max_rounds - rnd)
+        if fs is not None:
+            # never skip across a failure/recovery boundary
+            nb = fs.next_change(t)
+            if np.isfinite(nb):
+                skip = min(skip, int(np.ceil((nb - t) / round_len)))
         # strictness: bulk progress must leave every parent unfinished,
         # or the completion round (finish_time, note_completion) and the
         # per-copy capping it triggers would be skipped
@@ -311,6 +373,8 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
         for i in range(skip):
             rounds.append(dataclasses.replace(
                 steady, t=t + i * round_len, sched_seconds=0.0))
+        busy_total += busy_gpu_time * skip
+        avail_total += avail_gpus * round_len * skip
         if _ob.enabled:
             _ob.sim_span("fast_forward", t, t + skip * round_len,
                          rounds=skip, engine="hadare")
@@ -318,4 +382,58 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
         rnd += skip
 
     total_s = max((p.finish_time or t) for p in parents) if parents else 0.0
-    return SimResult("hadare", rounds, parents, total_s)
+    res = SimResult("hadare", rounds, parents, total_s,
+                    gpu_seconds_busy=busy_total,
+                    gpu_seconds_avail=avail_total,
+                    gpu_seconds_lost=lost_total,
+                    evictions=ev_total)
+    if _san:
+        _inv.check_goodput(res.goodput(), res.gru_overall(), "hadare")
+    return res
+
+
+# ---------------------------------------------------------------------------
+# independent per-pod simulation (multi_cluster topologies)
+# ---------------------------------------------------------------------------
+
+def simulate_pods(scheduler_factory, jobs: List[Job], cluster: Cluster,
+                  mode: str = "event", faults=None,
+                  assign: Optional[Dict[int, int]] = None,
+                  **kw) -> List[SimResult]:
+    """Simulate each pod of a ``multi_cluster`` topology independently.
+
+    Each pod gets its own scheduler instance (``scheduler_factory`` is
+    called once per pod), its own sub-cluster, its own job partition
+    (``assign`` maps job_id -> pod index; default round-robin in
+    (arrival, job_id) order), and the failure schedule restricted to
+    its own nodes.  Pods therefore fail and recover *independently*: a
+    pod-local outage cannot perturb a sibling pod's decisions — the
+    sibling's simulation is byte-for-byte the same with or without the
+    outage (pinned by ``tests/test_faults.py``).
+
+    ``faults`` may be a ``FailureModel`` (sampled once against the full
+    cluster; per-node RNG streams make the pod restriction bitwise
+    equal to pod-local sampling), a ``FailureTrace``, or ``None``.
+    Returns one ``SimResult`` per pod, in pod order."""
+    if cluster.pods is None:
+        raise ValueError("cluster has no pod topology metadata "
+                         "(build it with trace.multi_cluster)")
+    by_node = {n.node_id: n for n in cluster.nodes}
+    n_pods = len(cluster.pods)
+    order = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    if assign is None:
+        assign = {j.job_id: i % n_pods for i, j in enumerate(order)}
+    ftrace = resolve_faults(faults, cluster)
+    results: List[SimResult] = []
+    for pi, node_ids in enumerate(cluster.pods):
+        sub = Cluster([by_node[h] for h in node_ids])
+        pod_jobs = [j for j in order if assign.get(j.job_id) == pi]
+        pod_faults = (ftrace.restrict(node_ids)
+                      if ftrace is not None else None)
+        if pod_faults is not None and not len(pod_faults):
+            # an empty restriction runs the exact fault-free code path,
+            # making "sibling pod unaffected" trivially bitwise
+            pod_faults = None
+        results.append(run(scheduler_factory(), pod_jobs, sub, mode=mode,
+                           faults=pod_faults, **kw))
+    return results

@@ -44,7 +44,10 @@ from typing import Dict, List, Optional, Set
 from repro import obs as _obs
 from repro.analysis import invariants as _inv
 from repro.core.types import Alloc, Cluster, Job, alloc_nodes, alloc_size
-from repro.sim.events import EventKind, EventQueue
+from repro.sim.events import FAULT_KINDS, EventKind, EventQueue
+from repro.sim.faults import (KIND_SPOT, FaultState,
+                              resolve_checkpoint_interval, resolve_faults,
+                              rollback_point, select_evictions)
 from repro.sim.metrics import (EventSimResult, MetricsRecorder, RoundRecord,
                                SimResult)
 
@@ -75,12 +78,17 @@ def _job_penalty(job: Job, default: float) -> float:
 
 
 def _reset_jobs(jobs: List[Job]) -> None:
+    """Reset every simulator-owned mutable field so repeated ``run()``
+    calls on the same job list start clean (all three engines and the
+    HadarE adapter share this)."""
     for j in jobs:
         j.done_iters = 0.0
         j.finish_time = None
         j.attained_service = 0.0
         j.alloc = None
         j.restarts = 0
+        j.evictions = 0
+        j.lost_iters = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -104,13 +112,23 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_rounds: int = 20000,
                     restart_penalty: float = RESTART_PENALTY,
                     solver: Optional[str] = None,
-                    sanitize: bool = None) -> SimResult:
+                    sanitize: bool = None,
+                    faults=None) -> SimResult:
     """Round-based simulation; byte-identical to the seed round loop on
     dense traces, O(events) on sparse ones via steady fast-forward.
     ``solver`` ("jax" | "numpy" | "auto") overrides the scheduler's
     pricing backend; decisions are backend-independent.  ``sanitize``
     (default: the ``REPRO_SANITIZE`` env flag) asserts the paper's
-    invariants after every scheduling decision."""
+    invariants after every scheduling decision.
+
+    ``faults`` (a ``FailureModel``, ``FailureTrace``, or iterable of
+    windows) injects node failures/spot preemptions *quantized to round
+    starts*: a window is active at the first round boundary >= its fail
+    time.  Because the round engine commits progress whole rounds at a
+    time, evictions at a boundary lose no iterations (the boundary is a
+    de-facto checkpoint) — only the fault-restart penalty counts
+    against goodput.  The event engine models intra-interval rollback;
+    that difference is part of the documented quantization tolerance."""
     _apply_solver(scheduler, solver)
     _ob = _obs.get()
     _san = _inv.sanitize_enabled(sanitize)
@@ -120,6 +138,11 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
     _reset_jobs(jobs)
     total_gpus = cluster.total_gpus()
     n_nodes = len(cluster.nodes)
+    ftrace = resolve_faults(faults, cluster)
+    fs = FaultState(ftrace, cluster) if ftrace is not None else None
+    fault_pending: Set[int] = set()
+    busy_total = avail_total = lost_total = 0.0
+    ev_total = 0
     arrivals = [j.arrival for j in jobs]          # sorted with jobs
     rounds: List[RoundRecord] = []
     t = 0.0
@@ -127,12 +150,45 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
     while rnd < max_rounds:
         if all(j.is_done() for j in jobs):
             break
+        avail_gpus, avail_nodes = total_gpus, n_nodes
+        if fs is not None:
+            prev_down = set(fs.down)
+            if fs.advance_to(t):
+                if _ob.enabled:
+                    for h in sorted(fs.down - prev_down):
+                        w = fs.active_window(h, t)
+                        _ob.fault("spot_preempt" if w is not None
+                                  and w.kind == KIND_SPOT else "node_fail",
+                                  t, h, w.recover_time if w else None)
+                    for h in sorted(prev_down - fs.down):
+                        _ob.fault("node_recover", t, h)
+                victims = select_evictions(jobs, fs.live_capacity())
+                for rank, j in enumerate(victims):
+                    payoff = (j.bottleneck_rate(j.alloc)
+                              * alloc_size(j.alloc))
+                    ev_nodes = alloc_nodes(j.alloc)
+                    j.alloc = None
+                    j.evictions += 1
+                    ev_total += 1
+                    fault_pending.add(j.job_id)
+                    if _ob.enabled:
+                        _ob.eviction(_obs.eviction_record(
+                            t, j.job_id, j.n_workers, "capacity",
+                            ev_nodes, 0.0, 0.0, payoff, rank))
+                if _san:
+                    _inv.check_down_allocs(jobs, fs.down, t, "rounds")
+            avail_gpus, avail_nodes = fs.up_counts()
         qlen = (sum(1 for j in jobs if not j.is_done()
                     and j.arrival <= t and not j.alloc)
                 if _ob.enabled else 0)
-        with _ob.consult("rounds", scheduler.name, t, qlen) as sw:
-            desired = scheduler.schedule(t, round_len, jobs, cluster)
-        sched_s = sw.seconds
+        view = fs.view() if fs is not None else cluster
+        if view.nodes:
+            with _ob.consult("rounds", scheduler.name, t, qlen) as sw:
+                desired = scheduler.schedule(t, round_len, jobs, view)
+            sched_s = sw.seconds
+        else:
+            desired = {}            # total outage: nothing schedulable
+            sched_s = 0.0
 
         changed = 0
         busy_gpu_time = 0.0
@@ -149,6 +205,11 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
                 if new is not None and j.alloc is not None:
                     j.restarts += 1
                 penalty = _job_penalty(j, restart_penalty) if new else 0.0
+                if new is not None and j.job_id in fault_pending:
+                    # fault-restart charge: this penalty replays work a
+                    # fault destroyed, not a scheduler-chosen move
+                    lost_total += penalty * alloc_size(new)
+                    fault_pending.discard(j.job_id)
             else:
                 penalty = 0.0
             j.alloc = new
@@ -184,12 +245,16 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
         n_running = sum(1 for j in jobs if j.alloc and not j.is_done())
         rounds.append(RoundRecord(
             t=t,
-            gru=busy_gpu_time / (total_gpus * round_len),
-            cru=len(busy_nodes) / max(1, n_nodes),
+            gru=(busy_gpu_time / (avail_gpus * round_len)
+                 if avail_gpus > 0 else 0.0),
+            cru=(len(busy_nodes) / avail_nodes if avail_nodes > 0
+                 else 0.0),
             running=n_running,
             waiting=n_active - n_running,
             changed=changed,
             sched_seconds=sched_s))
+        busy_total += busy_gpu_time
+        avail_total += avail_gpus * round_len
         if _ob.enabled:
             r = rounds[-1]
             _ob.interval("rounds", r.t, round_len, r.gru, r.cru,
@@ -224,6 +289,12 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
         k_arr = (math.ceil((arrivals[i_arr] - t) / round_len)
                  if i_arr < len(arrivals) else k_comp)
         skip = min(k_comp - 1, k_arr, max_rounds - rnd)
+        if fs is not None:
+            # never skip across a failure/recovery boundary: the skip
+            # must stop at the first round start at/after the change
+            nb = fs.next_change(t)
+            if math.isfinite(nb):
+                skip = min(skip, int(math.ceil((nb - t) / round_len)))
         # float safety: ceil() can under-count by one ulp; the bulk
         # progress below must leave every job strictly unfinished, or the
         # completion round (finish_time, note_completion) would be skipped
@@ -243,6 +314,8 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
         for i in range(skip):
             rounds.append(dataclasses.replace(
                 steady, t=t + i * round_len, sched_seconds=0.0))
+        busy_total += busy_gpu_time * skip
+        avail_total += avail_gpus * round_len * skip
         if _ob.enabled:
             _ob.sim_span("fast_forward", t, t + skip * round_len,
                          rounds=skip, engine="rounds")
@@ -250,7 +323,14 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
         rnd += skip
 
     total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
-    return SimResult(scheduler.name, rounds, jobs, total)
+    res = SimResult(scheduler.name, rounds, jobs, total,
+                    gpu_seconds_busy=busy_total,
+                    gpu_seconds_avail=avail_total,
+                    gpu_seconds_lost=lost_total,
+                    evictions=ev_total)
+    if _san:
+        _inv.check_goodput(res.goodput(), res.gru_overall(), "rounds")
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +341,10 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                     round_len: float = 360.0, max_events: int = 500000,
                     restart_penalty: float = RESTART_PENALTY,
                     solver: Optional[str] = None,
-                    sanitize: bool = None) -> EventSimResult:
+                    sanitize: bool = None,
+                    faults=None,
+                    checkpoint_interval: Optional[float] = None
+                    ) -> EventSimResult:
     """Continuous-time simulation: t jumps to the next event.
 
     ``round_len`` keeps two roles: the scheduling quantum for schedulers
@@ -274,6 +357,20 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     ``simulate_rounds``).  Schedulers with incremental PriceState (Hadar)
     price each event step against persistent arrays — no per-consult
     state rebuild.
+
+    ``faults`` (a ``FailureModel``, ``FailureTrace``, or iterable of
+    windows) injects NODE_FAIL / SPOT_PREEMPT / NODE_RECOVER events at
+    their exact times.  On a failure: every job holding devices on a
+    down node — plus, under shrunken capacity, further victims in
+    reverse payoff order — is evicted, its predicted completion
+    invalidated, and its progress rolled back to the last checkpoint
+    (``checkpoint_interval`` seconds of progress apart; defaults to the
+    model's knob, see ``repro.sim.faults``).  The rolled-back work and
+    the extra restart penalty the job pays when it reallocates are
+    charged as *lost* GPU-seconds, so ``result.goodput()`` <
+    ``result.gru_overall()`` exactly when a fault cost something.
+    Scheduler consults price against the up-capacity view (cached per
+    down-set, so persistent PriceState geometry checks keep hitting).
     """
     _apply_solver(scheduler, solver)
     _ob = _obs.get()
@@ -287,9 +384,25 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     q = EventQueue(sanitize=_san)
     for j in jobs:
         q.push_arrival(j.arrival, j.job_id)
+    ftrace = resolve_faults(faults, cluster)
+    fs = FaultState(ftrace, cluster) if ftrace is not None else None
+    ckpt = resolve_checkpoint_interval(checkpoint_interval, faults)
+    if fs is not None:
+        for w in fs.trace:
+            q.push_fault(w.fail_time,
+                         EventKind.SPOT_PREEMPT if w.kind == KIND_SPOT
+                         else EventKind.NODE_FAIL, w.node_id)
+            if math.isfinite(w.recover_time):
+                q.push_fault(w.recover_time, EventKind.NODE_RECOVER,
+                             w.node_id)
     recorder = MetricsRecorder(cluster.total_gpus(), len(cluster.nodes),
                                sanitize=_san)
     pen_until: Dict[int, float] = {j.job_id: 0.0 for j in jobs}
+    # checkpoint anchoring for rollback: when the current allocation
+    # started progressing (post-penalty) and from how many done iters
+    prog_start: Dict[int, float] = {}
+    prog_done0: Dict[int, float] = {}
+    fault_pending: Set[int] = set()   # evicted, owing a fault-restart charge
     t = 0.0
     n_events = 0
     sched_calls = 0
@@ -345,30 +458,113 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
         open_sched_s = 0.0
 
         any_completed = False
+        fault_hit = False
+        cap_changed = False
+        fault_only = all(ev.kind in FAULT_KINDS for ev in batch)
+        fail_kind: Dict[int, str] = {}   # node failed this batch -> reason
         for ev in batch:
             n_events += 1
             if ev.kind == EventKind.COMPLETION:
                 j = by_id[ev.job_id]
                 if j.is_done() and j.finish_time is not None:
                     continue
+                # tie-order note: a completion predicted for exactly a
+                # failure instant pops first (COMPLETION < NODE_FAIL),
+                # so the job finishes and is never rolled back
                 j.done_iters = j.total_iters
                 j.finish_time = t
                 j.alloc = None
                 if _ob.enabled:
                     _ob.completion(t, j.job_id, t - j.arrival)
                 any_completed = True
+            elif ev.kind == EventKind.NODE_RECOVER:
+                fs.recover(ev.node_id)
+                cap_changed = True
+                if _ob.enabled:
+                    _ob.fault("node_recover", t, ev.node_id)
+            elif ev.kind in (EventKind.NODE_FAIL, EventKind.SPOT_PREEMPT):
+                reason = ("spot_preempt"
+                          if ev.kind == EventKind.SPOT_PREEMPT
+                          else "node_fail")
+                fs.fail(ev.node_id)
+                fault_hit = True
+                cap_changed = True
+                fail_kind[ev.node_id] = reason
+                if _ob.enabled:
+                    _ob.fault(reason, t, ev.node_id,
+                              fs.recover_time(ev.node_id, t))
         if any_completed and hasattr(scheduler, "note_completion"):
             scheduler.note_completion()
+
+        if fault_hit:
+            victims = select_evictions(jobs, fs.live_capacity())
+            for rank, j in enumerate(victims):
+                w = alloc_size(j.alloc)
+                rate_w = j.bottleneck_rate(j.alloc) * w
+                run_s = t - prog_start.get(j.job_id, t)
+                retained = rollback_point(
+                    prog_done0.get(j.job_id, j.done_iters),
+                    j.done_iters, rate_w, run_s, ckpt)
+                lost = max(0.0, j.done_iters - retained)
+                lost_gpu = (lost / rate_w) * w if rate_w > 0 else 0.0
+                ev_nodes = alloc_nodes(j.alloc)
+                # direct victims sit on a node that failed this batch;
+                # the rest were shed to fit the shrunken capacity
+                reason = "capacity"
+                for h in ev_nodes:
+                    if h in fail_kind:
+                        reason = fail_kind[h]
+                        break
+                j.done_iters = retained
+                j.lost_iters += lost
+                j.evictions += 1
+                j.alloc = None
+                pen_until[j.job_id] = t
+                fault_pending.add(j.job_id)
+                recorder.add_loss(lost_gpu, eviction=True)
+                q.invalidate_completion(j.job_id)
+                open_changed += 1
+                if _san:
+                    # rollback legitimately decreases done_iters; move
+                    # the progress-monotonicity floor with it
+                    prev_done[j.job_id] = float(j.done_iters)
+                if _ob.enabled:
+                    _ob.eviction(_obs.eviction_record(
+                        t, j.job_id, j.n_workers, reason, ev_nodes,
+                        lost, lost_gpu, rate_w, rank))
+            if _san:
+                _inv.check_down_allocs(jobs, fs.down, t, "events")
+        if cap_changed:
+            g, nn = fs.up_counts()
+            recorder.set_capacity(g, nn)
         if all(j.is_done() for j in jobs):
             break
 
-        qlen = (sum(1 for j in jobs if not j.is_done()
-                    and j.arrival <= t and j.alloc is None)
-                if _ob.enabled else 0)
-        with _ob.consult("events", scheduler.name, t, qlen) as sw:
-            desired = scheduler.schedule(t, round_len, jobs, cluster)
-        open_sched_s = sw.seconds
-        sched_calls += 1
+        # a fault-only batch that evicted nobody and leaves no active
+        # job unallocated cannot change any allocation — skip the
+        # consult (and leave every completion prediction intact).
+        # Benign windows on idle or fully-placed capacity then cost
+        # O(1); the next arrival / completion / quantum consults
+        # against the updated view anyway.
+        if (fault_only and open_changed == 0
+                and not any(not j.is_done() and j.arrival <= t
+                            and j.alloc is None for j in jobs)):
+            if _san:
+                _check_state(jobs, fs.live_capacity(), t, "events",
+                             prev_done)
+            continue
+
+        view = fs.view() if fs is not None else cluster
+        if view.nodes:
+            qlen = (sum(1 for j in jobs if not j.is_done()
+                        and j.arrival <= t and j.alloc is None)
+                    if _ob.enabled else 0)
+            with _ob.consult("events", scheduler.name, t, qlen) as sw:
+                desired = scheduler.schedule(t, round_len, jobs, view)
+            open_sched_s = sw.seconds
+            sched_calls += 1
+        else:
+            desired = {}            # total outage: wait for a recovery
 
         for j in jobs:
             if j.is_done():
@@ -392,20 +588,33 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
             pen_until[j.job_id] = t + pen
             rate = j.bottleneck_rate(new)
             w = alloc_size(new)
+            if j.job_id in fault_pending:
+                # fault-restart charge: this penalty replays work a
+                # fault destroyed, not a scheduler-chosen move
+                recorder.add_loss(pen * w)
+                fault_pending.discard(j.job_id)
+            prog_start[j.job_id] = t + pen
+            prog_done0[j.job_id] = float(j.done_iters)
             if rate * w > 0:
                 t_fin = t + pen + j.remaining_iters / (rate * w)
                 q.push_completion(t_fin, j.job_id)
 
         if _san:
-            _check_state(jobs, cap, t, "events", prev_done)
+            _check_state(jobs,
+                         fs.live_capacity() if fs is not None else cap,
+                         t, "events", prev_done)
 
         # re-schedule quantum: always for rotating schedulers; for stable
         # ones only while some active job is still unallocated (the same
         # condition that disables the round engine's fast-forward), so
         # waiting jobs are retried each round instead of silently
-        # starving when no completion/arrival is pending
-        if any(not j.is_done() and j.arrival <= t
-               and (not stable or j.alloc is None) for j in jobs):
+        # starving when no completion/arrival is pending.  During a
+        # total outage no quantum is pushed — the next NODE_RECOVER
+        # triggers the consult — so the loop cannot spin on an empty
+        # cluster.
+        if ((fs is None or fs.any_up())
+                and any(not j.is_done() and j.arrival <= t
+                        and (not stable or j.alloc is None) for j in jobs)):
             q.push_reschedule(t + round_len)
 
     total = max((j.finish_time or t) for j in jobs) if jobs else 0.0

@@ -1,21 +1,39 @@
 """Heap-based event queue for the continuous-time simulator.
 
-Three event kinds drive the engine:
+Six event kinds drive the engine:
 
-- ``ARRIVAL``    — a job's submit time was reached; it joins the queue.
-- ``COMPLETION`` — a *predicted* completion.  Predictions are made when
+- ``ARRIVAL``      — a job's submit time was reached; it joins the queue.
+- ``COMPLETION``   — a *predicted* completion.  Predictions are made when
   an allocation is (re)assigned: ``t_fin = max(t, penalty_end) +
   remaining / (rate * workers)``.  They stay exact as long as the
   allocation is untouched; when the scheduler changes a job's
   allocation the old prediction is invalidated lazily via a per-job
   version counter (no O(n) heap surgery).
-- ``RESCHEDULE`` — a periodic scheduling quantum.  Only needed for
+- ``NODE_RECOVER`` — a failed/reclaimed node comes back; its capacity
+  rejoins the schedulable pool.
+- ``NODE_FAIL``    — a node fails (hardware MTBF); every job holding
+  devices on it is evicted and rolled back to its last checkpoint.
+- ``SPOT_PREEMPT`` — spot capacity is reclaimed; same eviction
+  semantics as ``NODE_FAIL`` but accounted separately.
+- ``RESCHEDULE``   — a periodic scheduling quantum.  Only needed for
   schedulers without ``stable_when_idle`` (Gavel/Tiresias rotate
   allocations every round even with no arrivals/completions).
 
 Ties at the same timestamp are ordered ARRIVAL < COMPLETION <
-RESCHEDULE, then FIFO by push order, so a completion coinciding with an
-arrival sees the arrival already active when the scheduler runs.
+NODE_RECOVER < NODE_FAIL < SPOT_PREEMPT < RESCHEDULE, then FIFO by push
+order:
+
+- an arrival coinciding with anything else is active when the scheduler
+  runs (unchanged from the three-kind ordering);
+- a completion predicted for exactly the failure instant *completes* —
+  the job had finished when the node died, so it is not rolled back;
+- capacity recovering at t is schedulable at t even if another node
+  fails in the same instant (recover before fail also makes
+  back-to-back windows on one node — recover at t, next failure at t —
+  well-defined: the node is up for a zero-length instant, not down
+  twice);
+- all fault kinds precede the reschedule quantum, so a coinciding
+  consult prices against the post-fault capacity.
 """
 from __future__ import annotations
 
@@ -29,7 +47,15 @@ from typing import Dict, List, Optional
 class EventKind(enum.IntEnum):
     ARRIVAL = 0
     COMPLETION = 1
-    RESCHEDULE = 2
+    NODE_RECOVER = 2
+    NODE_FAIL = 3
+    SPOT_PREEMPT = 4
+    RESCHEDULE = 5
+
+
+#: event kinds that carry a node payload instead of a job payload
+FAULT_KINDS = frozenset({EventKind.NODE_RECOVER, EventKind.NODE_FAIL,
+                         EventKind.SPOT_PREEMPT})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +63,7 @@ class Event:
     time: float
     kind: EventKind
     job_id: Optional[int] = None
+    node_id: Optional[int] = None
 
 
 class EventQueue:
@@ -73,6 +100,16 @@ class EventQueue:
     def invalidate_completion(self, job_id: int) -> None:
         """Drop any outstanding completion prediction for ``job_id``."""
         self._version[job_id] = self._version.get(job_id, 0) + 1
+
+    def push_fault(self, time: float, kind: EventKind,
+                   node_id: int) -> None:
+        """Schedule a NODE_FAIL / NODE_RECOVER / SPOT_PREEMPT for a node.
+        Fault events are never invalidated — a failure schedule is an
+        exogenous input, not a prediction."""
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"push_fault with non-fault kind {kind!r}")
+        heapq.heappush(self._heap, (time, int(kind),
+                                    next(self._seq), node_id, 0))
 
     def push_reschedule(self, time: float) -> None:
         """At most one pending reschedule; keep the earliest.  Only the
@@ -113,14 +150,17 @@ class EventQueue:
             self._last_popped = t0
         out: List[Event] = []
         while self._heap and self._heap[0][0] == t0:
-            time, kind, _, job_id, v = heapq.heappop(self._heap)
+            time, kind, _, payload, v = heapq.heappop(self._heap)
             if (kind == int(EventKind.COMPLETION)
-                    and v != self._version.get(job_id, 0)):
+                    and v != self._version.get(payload, 0)):
                 continue
             if kind == int(EventKind.RESCHEDULE):
                 if time != self._resched_at:
                     continue                    # superseded or consumed
                 self._resched_at = None
-            out.append(Event(time, EventKind(kind), job_id))
+            if EventKind(kind) in FAULT_KINDS:
+                out.append(Event(time, EventKind(kind), node_id=payload))
+            else:
+                out.append(Event(time, EventKind(kind), job_id=payload))
             self._discard_stale()
         return out

@@ -46,10 +46,37 @@ class SimResult:
     rounds: List[RoundRecord]
     jobs: List[Job]
     total_seconds: float       # TTD
+    # --- goodput accounting (fault realism) ---
+    # busy: GPU-seconds held by allocated jobs; avail: GPU-seconds of
+    # *live* capacity (down nodes excluded); lost: GPU-seconds wasted to
+    # faults — rolled-back progress plus fault-restart penalty time.
+    # Ordinary (scheduler-chosen) restart penalties count as busy in
+    # both GRU and goodput, so goodput == gru_overall exactly when no
+    # fault eviction lost anything.
+    gpu_seconds_busy: float = 0.0
+    gpu_seconds_avail: float = 0.0
+    gpu_seconds_lost: float = 0.0
+    evictions: int = 0
 
     @property
     def ttd_hours(self) -> float:
         return self.total_seconds / 3600.0
+
+    def gru_overall(self) -> float:
+        """Whole-run GPU utilization: busy / available GPU-seconds."""
+        if self.gpu_seconds_avail <= 0.0:
+            return 0.0
+        return self.gpu_seconds_busy / self.gpu_seconds_avail
+
+    def goodput(self) -> float:
+        """Useful progress-seconds / available GPU-seconds: the busy
+        time minus work rolled back and penalties paid because of
+        faults.  Always <= gru_overall(); strictly below it iff a
+        fault eviction cost something."""
+        if self.gpu_seconds_avail <= 0.0:
+            return 0.0
+        useful = max(0.0, self.gpu_seconds_busy - self.gpu_seconds_lost)
+        return useful / self.gpu_seconds_avail
 
     def avg_jct(self) -> float:
         done = [j.finish_time - j.arrival for j in self.jobs
@@ -126,23 +153,51 @@ class MetricsRecorder:
                  sanitize: bool = False):
         self.total_gpus = max(1, total_gpus)
         self.n_nodes = max(1, n_nodes)
+        # live (fault-aware) capacity; set_capacity updates it as nodes
+        # fail and recover.  Starts at the full cluster.
+        self.avail_gpus = self.total_gpus
+        self.avail_nodes = self.n_nodes
+        self.busy_gpu_seconds = 0.0
+        self.avail_gpu_seconds = 0.0
+        self.lost_gpu_seconds = 0.0
+        self.evictions = 0
         self.records: List[IntervalRecord] = []
         self._sanitize = bool(sanitize)
+
+    def set_capacity(self, gpus: int, nodes: int) -> None:
+        """Dynamic capacity under faults; applies to intervals closed
+        after this call (the engine closes the pre-fault interval
+        first, so each interval is priced at the capacity that was
+        actually live during it)."""
+        self.avail_gpus = max(0, int(gpus))
+        self.avail_nodes = max(0, int(nodes))
+
+    def add_loss(self, gpu_seconds: float, eviction: bool = False) -> None:
+        """Charge fault waste: rolled-back progress or a fault-restart
+        penalty, in GPU-seconds; ``eviction=True`` also counts one
+        eviction."""
+        self.lost_gpu_seconds += max(0.0, float(gpu_seconds))
+        if eviction:
+            self.evictions += 1
 
     def close_interval(self, t0: float, dt: float, busy_gpu_time: float,
                        busy_nodes: Set[int], running: int, waiting: int,
                        changed: int, sched_seconds: float) -> None:
         if dt <= 0.0:
             return
+        denom = self.avail_gpus * dt
         rec = IntervalRecord(
             t=t0,
-            gru=busy_gpu_time / (self.total_gpus * dt),
-            cru=len(busy_nodes) / self.n_nodes,
+            gru=busy_gpu_time / denom if denom > 0.0 else 0.0,
+            cru=(len(busy_nodes) / self.avail_nodes
+                 if self.avail_nodes > 0 else 0.0),
             running=running,
             waiting=waiting,
             changed=changed,
             sched_seconds=sched_seconds,
             dt=dt)
+        self.busy_gpu_seconds += busy_gpu_time
+        self.avail_gpu_seconds += denom
         if self._sanitize:
             from repro.analysis import invariants as _inv
             _inv.check_utilization(rec.gru, rec.cru, t0, "events")
@@ -159,5 +214,13 @@ class MetricsRecorder:
 
     def result(self, name: str, jobs: List[Job], total_seconds: float,
                n_events: int, sched_calls: int) -> EventSimResult:
-        return EventSimResult(name, list(self.records), jobs, total_seconds,
-                              n_events=n_events, sched_calls=sched_calls)
+        res = EventSimResult(name, list(self.records), jobs, total_seconds,
+                             gpu_seconds_busy=self.busy_gpu_seconds,
+                             gpu_seconds_avail=self.avail_gpu_seconds,
+                             gpu_seconds_lost=self.lost_gpu_seconds,
+                             evictions=self.evictions,
+                             n_events=n_events, sched_calls=sched_calls)
+        if self._sanitize:
+            from repro.analysis import invariants as _inv
+            _inv.check_goodput(res.goodput(), res.gru_overall(), "events")
+        return res

@@ -37,16 +37,34 @@ the published trace schemas are accepted):
 
 ``save_trace_csv`` writes the canonical superset so load(save(jobs))
 round-trips losslessly.
+
+Failure traces
+--------------
+``load_fault_csv`` / ``save_fault_csv`` handle the companion
+failure-trace schema, one row per outage window:
+
+- ``node_id``       — int, required; validated against the cluster when
+  one is passed (unknown nodes rejected).
+- ``fail_time``     — seconds, required, >= 0.
+- ``recover_time``  — seconds, > fail_time; **empty means the node
+  never recovers** (serialized back as empty).
+- ``kind``          — optional, ``fail`` (default) or ``spot``.
+
+Validation rides on :class:`repro.sim.faults.FailureTrace`: overlapping
+windows on one node, inverted windows, and unknown kinds are rejected
+with the offending window named — the same rigor as job rows.
 """
 from __future__ import annotations
 
 import csv
 import datetime as _dt
+import math
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.trace import (THROUGHPUT_TABLE, calibrate_iters,
                               restart_penalty_for, restrict)
-from repro.core.types import Job
+from repro.core.types import Cluster, Job
+from repro.sim.faults import FailureTrace, FaultWindow, KIND_FAIL
 
 _ALIASES = {
     "job_id": ("job_id", "jobid"),
@@ -203,3 +221,62 @@ def save_trace_csv(jobs: List[Job], path: str) -> None:
                 if r in j.throughput:
                     row[f"tp_{r}"] = repr(j.throughput[r])
             w.writerow(row)
+
+
+# ---------------------------------------------------------------------------
+# failure traces
+# ---------------------------------------------------------------------------
+
+FAULT_FIELDS = ["node_id", "fail_time", "recover_time", "kind"]
+
+
+def load_fault_csv(path: str,
+                   cluster: Optional[Cluster] = None) -> FailureTrace:
+    """Load a failure-trace CSV (see module docstring for the schema).
+
+    Pass the target ``cluster`` to reject windows naming unknown nodes
+    at load time rather than at the engine boundary."""
+    windows: List[FaultWindow] = []
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        if reader.fieldnames is None:
+            return FailureTrace([], cluster)
+        lower = {name: name.strip().lower() for name in reader.fieldnames}
+        for idx, raw in enumerate(reader):
+            row = {lower[k]: (v or "").strip() for k, v in raw.items()
+                   if k is not None}
+            node_raw = row.get("node_id", "")
+            if node_raw == "":
+                raise ValueError(f"fault row {idx}: missing node_id")
+            fail_raw = row.get("fail_time", "")
+            if fail_raw == "":
+                raise ValueError(f"fault row {idx}: missing fail_time")
+            rec_raw = row.get("recover_time", "")
+            try:
+                node_id = int(float(node_raw))
+                fail_t = float(fail_raw)
+                rec_t = math.inf if rec_raw == "" else float(rec_raw)
+            except ValueError:
+                raise ValueError(
+                    f"fault row {idx}: unparseable numeric field in "
+                    f"{dict(row)!r}")
+            kind = row.get("kind", "") or KIND_FAIL
+            windows.append(FaultWindow(node_id, fail_t, rec_t, kind))
+    # FailureTrace validation: overlap, inversion, unknown node/kind
+    return FailureTrace(windows, cluster)
+
+
+def save_fault_csv(trace: FailureTrace, path: str) -> None:
+    """Write a failure trace in the canonical schema; ``inf`` recovery
+    serializes as an empty cell so load(save(trace)) round-trips."""
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=FAULT_FIELDS)
+        w.writeheader()
+        for win in trace:
+            w.writerow({
+                "node_id": win.node_id,
+                "fail_time": repr(win.fail_time),
+                "recover_time": ("" if math.isinf(win.recover_time)
+                                 else repr(win.recover_time)),
+                "kind": win.kind,
+            })

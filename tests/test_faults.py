@@ -1,0 +1,496 @@
+"""Failure realism (repro.sim.faults): fault-event ordering, seeded
+failure schedules, checkpoint rollback, eviction semantics, goodput
+accounting, CSV round-trips, determinism, and pod isolation."""
+import math
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro import obs
+from repro.analysis.invariants import (InvariantViolation,
+                                       check_down_allocs, check_goodput)
+from repro.core.hadar import HadarScheduler
+from repro.core.schedulers import YarnCSScheduler
+from repro.core.trace import multi_cluster, philly_trace, simulation_cluster
+from repro.core.types import Cluster, Job, Node
+from repro.sim.adapters import simulate_hadare, simulate_pods
+from repro.sim.engine import simulate_events, simulate_rounds
+from repro.sim.events import EventKind, EventQueue
+from repro.sim.faults import (FailureModel, FailureTrace, FaultState,
+                              FaultWindow, resolve_faults, rollback_point,
+                              select_evictions)
+from repro.sim.replay import load_fault_csv, save_fault_csv
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "..", "examples",
+                       "traces", "philly_mini_faults.csv")
+
+
+class _sanitize_env:
+    """Set REPRO_SANITIZE=1 for a block (fixture-free, @given-safe)."""
+
+    def __enter__(self):
+        self._old = os.environ.get("REPRO_SANITIZE")
+        os.environ["REPRO_SANITIZE"] = "1"
+
+    def __exit__(self, *exc):
+        if self._old is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = self._old
+
+
+def _one_node_cluster():
+    return Cluster([Node(0, {"v100": 1})])
+
+
+def _one_job(total_iters=1000, pen=10.0):
+    # rate 1.0 iter/s on one v100 worker: finishes at pen + total_iters
+    return [Job(0, 0.0, 1, total_iters // 100, 100, {"v100": 1.0},
+                restart_penalty=pen)]
+
+
+def _decisions(res):
+    """Decision-relevant fields only: wall-clock sched_seconds excluded
+    (nondeterministic across runs by construction)."""
+    per_job = tuple((j.job_id, j.finish_time, j.done_iters, j.restarts,
+                     j.evictions, j.lost_iters) for j in res.jobs)
+    recs = tuple((r.t, getattr(r, "dt", 0.0), r.gru, r.cru, r.running,
+                  r.waiting, r.changed) for r in res.rounds)
+    tot = (res.gpu_seconds_busy, res.gpu_seconds_avail,
+           res.gpu_seconds_lost, res.evictions)
+    return (per_job, recs, tot)
+
+
+# ---------------------------------------------------------------------------
+# event queue: fault kinds and tie ordering
+# ---------------------------------------------------------------------------
+
+def test_queue_tie_order_covers_fault_kinds():
+    q = EventQueue()
+    # push in reverse priority: pop_batch must re-order by kind
+    q.push_reschedule(5.0)
+    q.push_fault(5.0, EventKind.SPOT_PREEMPT, node_id=3)
+    q.push_fault(5.0, EventKind.NODE_FAIL, node_id=2)
+    q.push_fault(5.0, EventKind.NODE_RECOVER, node_id=1)
+    q.push_completion(5.0, job_id=7)
+    q.push_arrival(5.0, job_id=8)
+    batch = q.pop_batch()
+    assert [e.kind for e in batch] == [
+        EventKind.ARRIVAL, EventKind.COMPLETION, EventKind.NODE_RECOVER,
+        EventKind.NODE_FAIL, EventKind.SPOT_PREEMPT, EventKind.RESCHEDULE]
+    by_kind = {e.kind: e for e in batch}
+    assert by_kind[EventKind.NODE_FAIL].node_id == 2
+    assert by_kind[EventKind.NODE_FAIL].job_id is None
+    assert by_kind[EventKind.COMPLETION].job_id == 7
+    assert by_kind[EventKind.COMPLETION].node_id is None
+
+
+def test_queue_fault_events_survive_invalidation():
+    """Fault events are exogenous: completion invalidation for the same
+    numeric payload must not drop them."""
+    q = EventQueue()
+    q.push_fault(1.0, EventKind.NODE_FAIL, node_id=0)
+    q.invalidate_completion(0)
+    assert [e.kind for e in q.pop_batch()] == [EventKind.NODE_FAIL]
+
+
+def test_push_fault_rejects_non_fault_kind():
+    q = EventQueue()
+    with pytest.raises(ValueError, match="non-fault kind"):
+        q.push_fault(0.0, EventKind.COMPLETION, node_id=0)
+
+
+# ---------------------------------------------------------------------------
+# FailureTrace validation and FailureModel determinism
+# ---------------------------------------------------------------------------
+
+def test_failure_trace_validation():
+    cluster = _one_node_cluster()
+    with pytest.raises(ValueError, match="recover_time"):
+        FailureTrace([FaultWindow(0, 10.0, 5.0)])
+    with pytest.raises(ValueError, match="fail_time"):
+        FailureTrace([FaultWindow(0, -1.0, 5.0)])
+    with pytest.raises(ValueError, match="unknown kind"):
+        FailureTrace([FaultWindow(0, 1.0, 2.0, kind="meteor")])
+    with pytest.raises(ValueError, match="unknown node"):
+        FailureTrace([FaultWindow(9, 1.0, 2.0)], cluster)
+    with pytest.raises(ValueError, match="overlapping"):
+        FailureTrace([FaultWindow(0, 1.0, 5.0), FaultWindow(0, 4.0, 9.0)])
+    # back-to-back windows are legal (recover ties sort before fail)
+    tr = FailureTrace([FaultWindow(0, 5.0, 9.0), FaultWindow(0, 1.0, 5.0)])
+    assert [w.fail_time for w in tr] == [1.0, 5.0]
+    # never-recovering window is legal and restrict() filters by node
+    tr = FailureTrace([FaultWindow(0, 1.0), FaultWindow(3, 2.0, 4.0)])
+    assert [w.node_id for w in tr.restrict([3])] == [3]
+
+
+def test_failure_model_is_seed_deterministic_and_restrict_stable():
+    cluster = simulation_cluster()
+    model = FailureModel(mtbf_hours=4.0, recovery_s=600.0,
+                         recovery_dist="uniform", seed=7,
+                         horizon=48 * 3600.0)
+    a = model.sample(cluster)
+    b = model.sample(cluster)
+    assert len(a) > 0 and a == b
+    assert model.sample(cluster) != FailureModel(
+        mtbf_hours=4.0, recovery_s=600.0, recovery_dist="uniform",
+        seed=8, horizon=48 * 3600.0).sample(cluster)
+    # per-node streams: sampling a sub-cluster == restricting the full
+    # sample to its nodes (the pod-isolation property, at the source)
+    sub_ids = [n.node_id for n in cluster.nodes[:5]]
+    sub = Cluster([n for n in cluster.nodes if n.node_id in sub_ids])
+    assert model.sample(sub) == a.restrict(sub_ids)
+
+
+def test_failure_model_per_type_mtbf_and_spot():
+    cluster = simulation_cluster()      # 5x v100, 5x p100, 5x k80 nodes
+    only_k80 = FailureModel(mtbf_hours={"k80": 2.0}, seed=3,
+                            horizon=72 * 3600.0).sample(cluster)
+    k80_nodes = {n.node_id for n in cluster.nodes if "k80" in n.gpus}
+    assert len(only_k80) > 0
+    assert {w.node_id for w in only_k80} <= k80_nodes
+    spot = FailureModel(mtbf_hours=1e9, spot_nodes=[0],
+                        spot_reclaim_hours=6.0, seed=3,
+                        horizon=72 * 3600.0).sample(cluster)
+    assert len(spot) > 0
+    assert all(w.node_id == 0 and w.kind == "spot" for w in spot)
+
+
+def test_resolve_faults_accepts_all_forms():
+    cluster = _one_node_cluster()
+    assert resolve_faults(None, cluster) is None
+    tr = resolve_faults([(0, 1.0, 2.0)], cluster)
+    assert isinstance(tr, FailureTrace) and len(tr) == 1
+    assert resolve_faults(tr, cluster) == tr
+    model = FailureModel(mtbf_hours=0.5, seed=1, horizon=7200.0)
+    assert resolve_faults(model, cluster) == model.sample(cluster)
+    with pytest.raises(ValueError, match="unknown node"):
+        resolve_faults([(5, 1.0, 2.0)], cluster)
+
+
+# ---------------------------------------------------------------------------
+# failure-trace CSV: fixture, round-trip, rejection
+# ---------------------------------------------------------------------------
+
+def test_fault_csv_fixture_loads_against_cluster():
+    trace = load_fault_csv(FIXTURE, simulation_cluster())
+    assert len(trace) == 4
+    assert [w.kind for w in trace].count("spot") == 1
+    assert sum(1 for w in trace if math.isinf(w.recover_time)) == 1
+
+
+def test_fault_csv_round_trips(tmp_path):
+    trace = FailureTrace([FaultWindow(0, 10.0, 25.5, "spot"),
+                          FaultWindow(2, 100.0)])       # never recovers
+    p = tmp_path / "f.csv"
+    save_fault_csv(trace, str(p))
+    assert load_fault_csv(str(p)) == trace
+
+
+def test_fault_csv_rejects_bad_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("node_id,fail_time\n,5.0\n")
+    with pytest.raises(ValueError, match="missing node_id"):
+        load_fault_csv(str(p))
+    p.write_text("node_id,fail_time\n0,\n")
+    with pytest.raises(ValueError, match="missing fail_time"):
+        load_fault_csv(str(p))
+    p.write_text("node_id,fail_time,recover_time\n0,abc,5\n")
+    with pytest.raises(ValueError, match="unparseable"):
+        load_fault_csv(str(p))
+    p.write_text("node_id,fail_time,recover_time\n0,1.0,5.0\n0,3.0,9.0\n")
+    with pytest.raises(ValueError, match="overlapping"):
+        load_fault_csv(str(p))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rollback cost model
+# ---------------------------------------------------------------------------
+
+def test_rollback_point_math():
+    # 240 s of progress at 1 iter/s, checkpoint every 100 s: keep 200
+    assert rollback_point(0.0, 240.0, 1.0, 240.0, 100.0) == 200.0
+    # exactly on a checkpoint boundary: nothing lost
+    assert rollback_point(0.0, 200.0, 1.0, 200.0, 100.0) == 200.0
+    # before the first checkpoint: back to the restart point
+    assert rollback_point(50.0, 120.0, 1.0, 70.0, 100.0) == 50.0
+    # continuous checkpointing (interval <= 0): nothing lost
+    assert rollback_point(0.0, 77.0, 1.0, 77.0, 0.0) == 77.0
+    assert rollback_point(0.0, 5.0, 0.0, 5.0, 100.0) == 5.0  # rate 0
+
+
+def test_event_engine_rolls_back_to_last_checkpoint():
+    """rate 1.0, pen 10, ckpt 100: fail at 250 means 240 iters accrued,
+    200 retained, 40 lost; after recovery at 400 the job repays the
+    penalty and finishes at 400 + 10 + 800 = 1210."""
+    cluster = _one_node_cluster()
+    jobs = _one_job(total_iters=1000, pen=10.0)
+    with _sanitize_env():
+        res = simulate_events(YarnCSScheduler(), jobs, cluster,
+                              faults=[(0, 250.0, 400.0)],
+                              checkpoint_interval=100.0)
+    j = res.jobs[0]
+    assert j.evictions == 1 and res.evictions == 1
+    assert j.lost_iters == pytest.approx(40.0)
+    assert j.finish_time == pytest.approx(1210.0)
+    # lost GPU-seconds: 40 rolled-back + 10 fault-restart penalty
+    assert res.gpu_seconds_lost == pytest.approx(50.0)
+    assert res.goodput() < res.gru_overall()
+
+
+def test_goodput_equals_gru_without_faults():
+    cluster = _one_node_cluster()
+    res = simulate_events(YarnCSScheduler(), _one_job(), cluster)
+    assert res.evictions == 0 and res.gpu_seconds_lost == 0.0
+    assert res.goodput() == res.gru_overall() > 0.0
+
+
+def test_completion_at_failure_instant_completes():
+    """Tie order: COMPLETION before NODE_FAIL.  The job finishing at
+    exactly the failure instant completes un-evicted; an epsilon
+    earlier failure evicts it."""
+    cluster = _one_node_cluster()
+    with _sanitize_env():
+        tied = simulate_events(YarnCSScheduler(),
+                               _one_job(total_iters=100, pen=10.0),
+                               cluster, faults=[(0, 110.0, 200.0)])
+        early = simulate_events(YarnCSScheduler(),
+                                _one_job(total_iters=100, pen=10.0),
+                                cluster, faults=[(0, 109.5, 200.0)])
+    assert tied.evictions == 0
+    assert tied.jobs[0].finish_time == pytest.approx(110.0)
+    assert early.evictions == 1
+    assert early.jobs[0].finish_time == pytest.approx(310.0)
+
+
+def test_failure_at_t0_and_all_nodes_down_interval():
+    """A node down from t=0 delays placement without an eviction; the
+    engine idles through the total outage instead of spinning."""
+    cluster = _one_node_cluster()
+    with _sanitize_env():
+        res = simulate_events(YarnCSScheduler(),
+                              _one_job(total_iters=100, pen=10.0),
+                              cluster, faults=[(0, 0.0, 50.0)])
+    assert res.evictions == 0
+    assert res.jobs[0].finish_time == pytest.approx(160.0)
+    # intervals with zero live capacity report zero utilization
+    assert all(r.gru == 0.0 for r in res.rounds if r.t < 50.0)
+
+
+def test_spot_preempt_evicts_whole_gang():
+    """A gang spanning two nodes loses one to a spot reclaim: the whole
+    allocation is evicted atomically (one eviction, both nodes freed)."""
+    cluster = Cluster([Node(0, {"v100": 4}), Node(1, {"v100": 4})])
+    jobs = [Job(0, 0.0, 8, 10, 100, {"v100": 1.0}, restart_penalty=10.0)]
+    with _sanitize_env():
+        res = simulate_events(YarnCSScheduler(), jobs, cluster,
+                              faults=[(1, 60.0, 600.0, "spot")])
+    j = res.jobs[0]
+    assert res.evictions == 1 and j.evictions == 1
+    assert j.finish_time is not None and j.finish_time > 600.0
+
+
+def test_back_to_back_windows_are_well_defined():
+    """Recover at t and fail at t on the same node: NODE_RECOVER pops
+    first, so the node is never 'down twice'; the run stays sane."""
+    cluster = _one_node_cluster()
+    with _sanitize_env():
+        res = simulate_events(YarnCSScheduler(),
+                              _one_job(total_iters=100, pen=10.0),
+                              cluster,
+                              faults=[(0, 20.0, 40.0), (0, 40.0, 60.0)])
+    assert res.jobs[0].finish_time is not None
+
+
+def test_round_engine_fast_forward_never_skips_a_fault():
+    """The steady-state fast-forward is bounded by the next fault
+    boundary: a failure in the middle of a long quiet stretch still
+    evicts the lone running job."""
+    cluster = _one_node_cluster()
+    jobs = _one_job(total_iters=5000, pen=10.0)     # ~5010 s of work
+    with _sanitize_env():
+        res = simulate_rounds(HadarScheduler(), jobs, cluster,
+                              round_len=60.0,
+                              faults=[(0, 2400.0, 3000.0)])
+    j = res.jobs[0]
+    assert j.evictions == 1 and res.evictions == 1
+    assert j.finish_time is not None
+    assert res.goodput() < res.gru_overall()
+
+
+# ---------------------------------------------------------------------------
+# eviction policy
+# ---------------------------------------------------------------------------
+
+def test_select_evictions_reverse_payoff_order():
+    def mk(jid, node, count, rate):
+        j = Job(jid, 0.0, count, 10, 100, {"v100": rate})
+        j.alloc = {(node, "v100"): count}
+        return j
+
+    # node 0 holds two jobs; capacity drops to 2 devices: the lower
+    # aggregate-throughput job goes first
+    low = mk(1, 0, 2, 0.5)      # payoff 1.0
+    high = mk(2, 0, 2, 2.0)     # payoff 4.0
+    out = select_evictions([low, high], {(0, "v100"): 2})
+    assert [j.job_id for j in out] == [1]
+    # node fully down: both evicted, lowest payoff first
+    out = select_evictions([low, high], {(0, "v100"): 0})
+    assert [j.job_id for j in out] == [1, 2]
+    # fits: nothing evicted
+    assert select_evictions([low, high], {(0, "v100"): 4}) == []
+
+
+# ---------------------------------------------------------------------------
+# sanitizer invariants (negative tests) and obs recording
+# ---------------------------------------------------------------------------
+
+def test_check_down_allocs_fires():
+    j = Job(0, 0.0, 1, 10, 100, {"v100": 1.0})
+    j.alloc = {(3, "v100"): 1}
+    with _sanitize_env():
+        check_down_allocs([j], set(), 0.0, "events")         # no-op
+        check_down_allocs([j], {5}, 0.0, "events")           # other node
+        with pytest.raises(InvariantViolation, match="down-alloc"):
+            check_down_allocs([j], {3}, 0.0, "events")
+
+
+def test_check_goodput_fires():
+    with _sanitize_env():
+        check_goodput(0.5, 0.5, "events")                    # equal: ok
+        with pytest.raises(InvariantViolation, match="goodput-bound"):
+            check_goodput(-0.1, 0.5, "events")
+        with pytest.raises(InvariantViolation, match="goodput-bound"):
+            check_goodput(0.9, 0.5, "events")
+
+
+def test_obs_records_faults_and_evictions():
+    cluster = _one_node_cluster()
+    with obs.session(trace_path=None) as ob:
+        simulate_events(YarnCSScheduler(), _one_job(), cluster,
+                        faults=[(0, 250.0, 400.0)])
+    assert ob.metrics.counter("faults.node_fail").value == 1
+    assert ob.metrics.counter("faults.node_recover").value == 1
+    assert ob.metrics.counter("faults.evictions").value == 1
+    ev = [r for r in ob.decisions.decisions
+          if r.get("phase") == "eviction"]
+    assert len(ev) == 1 and ev[0]["job"] == 0
+    assert ev[0]["reason"] == "node_fail"
+    assert ev[0]["lost_gpu_seconds"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# determinism: bitwise across runs, solvers, and repeated job lists
+# ---------------------------------------------------------------------------
+
+def test_event_engine_is_bitwise_deterministic_under_faults():
+    cluster = simulation_cluster()
+    model = FailureModel(mtbf_hours=6.0, recovery_s=1200.0, seed=5)
+
+    def go():
+        jobs = philly_trace(n_jobs=8, seed=2, types=cluster.gpu_types)
+        return simulate_events(HadarScheduler(), jobs, cluster,
+                               faults=model)
+
+    a, b = go(), go()
+    assert a.evictions >= 1
+    assert _decisions(a) == _decisions(b)
+
+
+def test_engine_resets_fault_counters_between_runs():
+    cluster = _one_node_cluster()
+    jobs = _one_job(total_iters=1000, pen=10.0)
+    r1 = simulate_events(YarnCSScheduler(), jobs, cluster,
+                         faults=[(0, 250.0, 400.0)],
+                         checkpoint_interval=100.0)
+    # same Job objects again: _reset_jobs must clear evictions/lost
+    r2 = simulate_events(YarnCSScheduler(), jobs, cluster,
+                         faults=[(0, 250.0, 400.0)],
+                         checkpoint_interval=100.0)
+    assert _decisions(r1) == _decisions(r2)
+    assert jobs[0].evictions == 1 and jobs[0].lost_iters == 40.0
+
+
+def test_hadare_solvers_agree_bitwise_under_faults():
+    cluster = simulation_cluster()
+    faults = [(0, 3600.0, 7200.0), (5, 3600.0, 7200.0)]
+
+    def go(solver):
+        jobs = philly_trace(n_jobs=4, seed=1, types=cluster.gpu_types)
+        return simulate_hadare(jobs, cluster, max_rounds=400,
+                               solver=solver, faults=faults)
+
+    a, b = go("numpy"), go("jax")
+    assert _decisions(a) == _decisions(b)
+
+
+# ---------------------------------------------------------------------------
+# pod isolation
+# ---------------------------------------------------------------------------
+
+def test_pod_failures_do_not_perturb_sibling_pods():
+    cluster = multi_cluster(n_pods=3)
+    assert cluster.pods is not None and len(cluster.pods) == 3
+    jobs = philly_trace(n_jobs=12, seed=3)
+    # knock out most of pod 0 mid-run so eviction pressure is real
+    wins = [FaultWindow(n, 5000.0, 20000.0) for n in cluster.pods[0][:4]]
+
+    with _sanitize_env():
+        faulty = simulate_pods(HadarScheduler, jobs, cluster,
+                               mode="event",
+                               faults=FailureTrace(wins, cluster))
+        clean = simulate_pods(HadarScheduler,
+                              philly_trace(n_jobs=12, seed=3), cluster,
+                              mode="event", faults=None)
+    assert faulty[0].evictions >= 1
+    assert faulty[0].goodput() < faulty[0].gru_overall()
+    # unaffected pods: byte-identical decisions with or without the
+    # sibling pod's outage
+    assert _decisions(faulty[1]) == _decisions(clean[1])
+    assert _decisions(faulty[2]) == _decisions(clean[2])
+
+
+def test_simulate_pods_requires_pod_topology():
+    cluster = simulation_cluster()      # no pods metadata
+    with pytest.raises(ValueError, match="pod topology"):
+        simulate_pods(HadarScheduler, philly_trace(n_jobs=4, seed=0),
+                      cluster)
+
+
+# ---------------------------------------------------------------------------
+# property tests: random fig5 traces + seeded faults, sanitized
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=30),
+       n=st.integers(min_value=4, max_value=10))
+def test_property_event_engine_under_seeded_faults(seed, n):
+    cluster = simulation_cluster()
+    model = FailureModel(mtbf_hours=8.0, recovery_s=1800.0,
+                         recovery_dist="uniform", spot_frac=0.2,
+                         spot_reclaim_hours=12.0, seed=seed)
+    with _sanitize_env():
+        jobs = philly_trace(n_jobs=n, seed=seed, types=cluster.gpu_types)
+        res = simulate_events(HadarScheduler(), jobs, cluster,
+                              faults=model, max_events=4000)
+    assert 0.0 <= res.goodput() <= res.gru_overall() + 1e-9
+    assert res.gpu_seconds_lost >= 0.0
+    assert (res.goodput() == res.gru_overall()) == (
+        res.gpu_seconds_lost == 0.0)
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=20))
+def test_property_hadare_under_seeded_faults(seed):
+    cluster = simulation_cluster()
+    model = FailureModel(mtbf_hours=24.0, recovery_s=1800.0, seed=seed)
+    with _sanitize_env():
+        jobs = philly_trace(n_jobs=4, seed=seed, types=cluster.gpu_types)
+        res = simulate_hadare(jobs, cluster, max_rounds=300,
+                              faults=model)
+    assert 0.0 <= res.goodput() <= res.gru_overall() + 1e-9
