@@ -56,6 +56,11 @@ the pricing threshold at runtime).
 and the HadarE backend must complete every job and agree within the
 documented quantization tolerance, and (when jax is importable) the
 batched solver must match the per-job path on small shapes.  It also
+runs the policy-comparison harness (``repro.env.compare``) over two
+baselines on a tiny fig5 trace — the emitted table must schema-validate
+and match the committed ``baseline_policy_table.json`` bit-for-bit (the
+simulation is deterministic, so any drift means an engine or
+baseline-policy behaviour change; re-record with ``--record``) — and
 lints src/ with ``repro.analysis`` against the committed
 ``analysis_baseline.json`` — zero non-baselined findings.  No perf
 baselines are touched.
@@ -99,6 +104,11 @@ FAULT_BLIP_S = 900.0            # deterministic all-nodes outage length
 # --calibrate sweeps (queue sizes, ascending)
 AUTO_SWEEP = (4, 8, 12, 16, 24, 32, 48)
 COMMIT_SWEEP = (24, 48, 96, 192, 384)
+POLICY_BASELINE = os.path.join(os.path.dirname(__file__),
+                               "baseline_policy_table.json")
+POLICY_SMOKE_N = 6              # tiny fig5 trace for the compare smoke
+POLICY_SMOKE_SEED = 9
+POLICY_SMOKE_POLICIES = ("fcfs", "srtf")
 
 
 def _best_round(mk_sched, jobs_factory, cluster) -> float:
@@ -296,6 +306,40 @@ def measure_commit(n_jobs=COMMIT_N_JOBS, repeats=2):
     return {"n_jobs": n_jobs, "numpy_s": best_np, "jax_s": best_jx,
             "speedup": best_np / max(best_jx, 1e-9),
             "selected": len(sel_np), "mismatches": mismatches}
+
+
+def measure_policy_table():
+    """The compare-harness smoke table: two classic baselines over a
+    tiny fig5 trace (deterministic, sub-second)."""
+    from repro.core.trace import philly_trace, simulation_cluster
+    from repro.env.compare import compare
+
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=POLICY_SMOKE_N, seed=POLICY_SMOKE_SEED)
+    return compare(jobs, cluster, policies=POLICY_SMOKE_POLICIES,
+                   trace_name=f"fig5(n={POLICY_SMOKE_N}, "
+                              f"seed={POLICY_SMOKE_SEED})")
+
+
+def policy_table_drift(cur, base, rtol=1e-9):
+    """Quality-metric drift between a freshly measured compare table and
+    the committed baseline: the simulation is deterministic, so every
+    row must match to float precision.  Returns a list of problems."""
+    probs = []
+    cr = {r["policy"]: r for r in cur.get("policies", [])}
+    br = {r["policy"]: r for r in base.get("policies", [])}
+    if set(cr) != set(br):
+        return [f"policy set changed: {sorted(cr)} vs {sorted(br)}"]
+    for name, b in br.items():
+        c = cr[name]
+        for f in ("ttd_hours", "avg_jct_s", "gru", "cru", "gru_overall",
+                  "goodput"):
+            if abs(c[f] - b[f]) > rtol * max(1.0, abs(b[f])):
+                probs.append(f"{name}.{f}: {c[f]!r} != {b[f]!r}")
+        for f in ("evictions", "restarts", "completed", "n_jobs"):
+            if c[f] != b[f]:
+                probs.append(f"{name}.{f}: {c[f]} != {b[f]}")
+    return probs
 
 
 def _suffix_crossover(rows, fallback):
@@ -501,6 +545,25 @@ def quick_smoke() -> None:
         wave_msg = (f"wave commit match (n=64, {waves} waves, "
                     f"{len(sel['jax'])} selected)")
 
+    # compare-harness smoke: two policies over a tiny trace must emit a
+    # schema-valid table whose quality metrics match the committed
+    # baseline to float precision — the simulation is deterministic, so
+    # drift means an engine or baseline-policy behaviour change
+    from repro.env.compare import validate_table
+    pdoc = measure_policy_table()
+    probs = validate_table(pdoc)
+    assert not probs, "policy table schema: " + "; ".join(probs)
+    assert os.path.exists(POLICY_BASELINE), \
+        (f"no committed policy table at {POLICY_BASELINE}; run "
+         f"benchmarks/check_speedup.py --record")
+    with open(POLICY_BASELINE, "r", encoding="utf-8") as fh:
+        pbase = json.load(fh)
+    drift = policy_table_drift(pdoc, pbase)
+    assert not drift, \
+        "policy table drift vs baseline: " + "; ".join(drift)
+    cmp_msg = (f"compare table ok ({len(pdoc['policies'])} policies, "
+               f"no drift)")
+
     # analysis smoke: the shipped src/ tree must lint clean against the
     # committed baseline (same gate as tests/test_analysis_gate.py)
     from repro.analysis.engine import lint_paths
@@ -516,7 +579,7 @@ def quick_smoke() -> None:
           f"event TTD {re.total_seconds:.0f}s "
           f"({re.n_events} events, {re.sched_calls} schedule calls), "
           f"hadare TTD {rh.total_seconds:.0f}s, {fault_msg}, {obs_msg}, "
-          f"{jit_msg}, {wave_msg}, {lint_msg}")
+          f"{jit_msg}, {wave_msg}, {cmp_msg}, {lint_msg}")
 
 
 def main():
@@ -564,8 +627,11 @@ def main():
         if commit is not None:
             with open(COMMIT_BASELINE, "w") as f:
                 json.dump(commit, f, indent=1)
+        with open(POLICY_BASELINE, "w") as f:
+            json.dump(measure_policy_table(), f, indent=1, sort_keys=True)
+            f.write("\n")
         print(f"recorded baselines: {current} | {event} | {faults} | "
-              f"{jit} | {commit}")
+              f"{jit} | {commit} | policy table -> {POLICY_BASELINE}")
         return
 
     failed = False

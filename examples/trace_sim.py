@@ -6,6 +6,7 @@ trace under all four schedulers and print the Fig. 3/4 metrics.
   PYTHONPATH=src python examples/trace_sim.py \
       --replay examples/traces/philly_mini.csv
   PYTHONPATH=src python examples/trace_sim.py --trace out.json --explain
+  PYTHONPATH=src python examples/trace_sim.py --baselines
 
 ``--engine event`` uses the continuous-time engine (repro.sim): time
 advances from event to event instead of fixed rounds — same metrics
@@ -18,6 +19,11 @@ Perfetto-loadable trace (open at https://ui.perfetto.dev); ``--explain``
 prints allocation provenance for the first few Hadar decisions (winning
 keys with Eq. 5 marginal prices, payoff, runner-up).  Decisions are
 bit-identical with observability on or off.
+
+``--baselines`` appends the heterogeneity-blind classic baselines from
+``repro.env.baselines`` (FCFS, SJF, SRTF, max-min share) to the table;
+``python -m repro.env.compare`` renders the same comparison as a
+schema-validated JSON quality table.
 """
 import argparse
 import sys, os
@@ -53,6 +59,9 @@ def main():
     ap.add_argument("--explain", action="store_true",
                     help="print allocation provenance for the first "
                          f"{N_EXPLAIN} Hadar decisions")
+    ap.add_argument("--baselines", action="store_true",
+                    help="also run the classic heterogeneity-blind "
+                         "baselines (repro.env.baselines)")
     args = ap.parse_args()
 
     cluster = simulation_cluster()
@@ -69,8 +78,15 @@ def main():
           f"{'JCT(h)':>8s} {'restart-rounds':>14s}" + goodput_col)
     observed = args.trace or args.explain
     explain_recs = []
-    for cls in (HadarScheduler, GavelScheduler, TiresiasScheduler,
-                YarnCSScheduler):
+    scheds = [HadarScheduler, GavelScheduler, TiresiasScheduler,
+              YarnCSScheduler]
+    if args.baselines:
+        from repro.env.baselines import (FCFSScheduler,
+                                         MaxMinShareScheduler,
+                                         SJFScheduler, SRTFScheduler)
+        scheds += [FCFSScheduler, SJFScheduler, SRTFScheduler,
+                   MaxMinShareScheduler]
+    for cls in scheds:
         if args.replay:
             jobs = load_trace_csv(args.replay, types=cluster.gpu_types)
         else:

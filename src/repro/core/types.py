@@ -106,6 +106,21 @@ class Job:
         return self.remaining_iters <= 1e-9
 
 
+def clone_job(job: Job) -> Job:
+    """Pristine copy of a job: static fields kept (own throughput dict),
+    every simulator-owned mutable field reset.  Harnesses that run the
+    same trace under several policies clone per run so one policy's
+    ``SimResult.jobs`` can never be mutated by the next run."""
+    return dataclasses.replace(
+        job, throughput=dict(job.throughput), done_iters=0.0,
+        finish_time=None, attained_service=0.0, alloc=None, restarts=0,
+        evictions=0, lost_iters=0.0)
+
+
+def clone_jobs(jobs: List[Job]) -> List[Job]:
+    return [clone_job(j) for j in jobs]
+
+
 def alloc_size(alloc: Optional[Alloc]) -> int:
     return sum(alloc.values()) if alloc else 0
 

@@ -46,8 +46,8 @@ Module map
   their ``faults=`` argument; results then report ``goodput()``
   alongside GRU/CRU.
 """
-from repro.sim.engine import (RESTART_PENALTY, simulate_events,
-                              simulate_rounds)
+from repro.sim.engine import (RESTART_PENALTY, ConsultPoint, event_stream,
+                              simulate_events, simulate_rounds)
 from repro.sim.faults import (CHECKPOINT_INTERVAL, FailureModel,
                               FailureTrace, FaultWindow)
 from repro.sim.metrics import (EventSimResult, IntervalRecord, RoundRecord,
@@ -55,7 +55,9 @@ from repro.sim.metrics import (EventSimResult, IntervalRecord, RoundRecord,
 
 __all__ = [
     "CHECKPOINT_INTERVAL",
+    "ConsultPoint",
     "RESTART_PENALTY",
+    "event_stream",
     "FailureModel",
     "FailureTrace",
     "FaultWindow",

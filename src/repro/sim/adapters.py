@@ -122,6 +122,18 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
     cap = _cap_by_key(cluster) if _san else None
     parents = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(parents)
+    # HadarE copies are single-node (fork_job), so a parent whose gang
+    # exceeds every node's eligible capacity can never place any copy.
+    # Once every feasible parent is done and arrived, no further
+    # progress is possible: stop instead of spinning to max_rounds.
+    # Infeasible parents finish with finish_time=None, which honest
+    # metrics (completed < n_jobs) surface downstream.
+    def _best_node_cap(p: Job) -> int:
+        return max((sum(c for r, c in n.gpus.items()
+                        if p.throughput.get(r, 0.0) > 0.0)
+                    for n in cluster.nodes), default=0)
+    infeasible = np.array([_best_node_cap(p) < p.n_workers
+                           for p in parents], dtype=bool)
     ftrace = resolve_faults(faults, cluster)
     fs = FaultState(ftrace, cluster) if ftrace is not None else None
     fault_pending: set = set()          # copy ids owing a restart charge
@@ -152,6 +164,9 @@ def simulate_hadare(jobs: List[Job], cluster: Cluster,
     while rnd < max_rounds:
         if bool(np.all(total - done <= 1e-9)):
             break
+        if bool(np.all(infeasible | (total - done <= 1e-9))) \
+                and bool(np.all(registered | infeasible)):
+            break                       # only never-placeable work left
         for i, p in enumerate(parents):
             if not registered[i] and p.arrival <= t:
                 cs = fork_job(p, C)

@@ -337,42 +337,76 @@ def simulate_rounds(scheduler, jobs: List[Job], cluster: Cluster,
 # continuous-time engine
 # ---------------------------------------------------------------------------
 
-def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
-                    round_len: float = 360.0, max_events: int = 500000,
-                    restart_penalty: float = RESTART_PENALTY,
-                    solver: Optional[str] = None,
-                    sanitize: bool = None,
-                    faults=None,
-                    checkpoint_interval: Optional[float] = None
-                    ) -> EventSimResult:
-    """Continuous-time simulation: t jumps to the next event.
+@dataclasses.dataclass
+class ConsultPoint:
+    """One scheduling decision point of the continuous-time engine, as
+    surfaced by :func:`event_stream`.
 
-    ``round_len`` keeps two roles: the scheduling quantum for schedulers
-    without ``stable_when_idle`` (they are re-consulted every
-    ``round_len`` while jobs are active), and the value passed to
-    ``scheduler.schedule`` so scheduler-side heuristics see the same
-    horizon as in round mode.
+    The caller answers the yield with either a ``desired`` allocation
+    map (``Dict[job_id, Alloc]``) or a ``(desired, sched_seconds)``
+    tuple — the latter lets drivers attribute real decision latency to
+    the interval records, exactly like ``simulate_events`` does.
 
-    ``solver`` overrides the scheduler's pricing backend (see
-    ``simulate_rounds``).  Schedulers with incremental PriceState (Hadar)
-    price each event step against persistent arrays — no per-consult
-    state rebuild.
+    ``completed`` lists the job ids whose completion events fired since
+    the previous consult; drivers wrapping a stateful scheduler must
+    forward them via ``scheduler.note_completion()`` *before* asking
+    for the next decision (delivering the notification at the next
+    consult is equivalent to the in-loop call the closed engine used
+    to make: the flag is only read inside ``schedule``).
 
-    ``faults`` (a ``FailureModel``, ``FailureTrace``, or iterable of
-    windows) injects NODE_FAIL / SPOT_PREEMPT / NODE_RECOVER events at
-    their exact times.  On a failure: every job holding devices on a
-    down node — plus, under shrunken capacity, further victims in
-    reverse payoff order — is evicted, its predicted completion
-    invalidated, and its progress rolled back to the last checkpoint
-    (``checkpoint_interval`` seconds of progress apart; defaults to the
-    model's knob, see ``repro.sim.faults``).  The rolled-back work and
-    the extra restart penalty the job pays when it reallocates are
-    charged as *lost* GPU-seconds, so ``result.goodput()`` <
-    ``result.gru_overall()`` exactly when a fault cost something.
-    Scheduler consults price against the up-capacity view (cached per
-    down-set, so persistent PriceState geometry checks keep hitting).
+    The ``busy/avail/lost`` fields snapshot the run's cumulative
+    GPU-second accounting at this decision point, so reward shaping
+    over the *preceding* window is one subtraction away.
     """
-    _apply_solver(scheduler, solver)
+    t: float
+    round_len: float
+    jobs: List[Job]                 # engine-owned sorted job list
+    view: Cluster                   # live (fault-aware) cluster view
+    completed: List[int]            # job ids finished since last consult
+    queue_len: int                  # active jobs with no allocation
+    down: frozenset = frozenset()   # node ids currently failed
+    busy_gpu_seconds: float = 0.0
+    avail_gpu_seconds: float = 0.0
+    lost_gpu_seconds: float = 0.0
+    evictions: int = 0
+
+
+def _parse_action(sent) -> tuple:
+    """Normalize a ``send()`` value into ``(desired, sched_seconds)``."""
+    if sent is None:
+        return {}, 0.0
+    if isinstance(sent, tuple):
+        desired, sched_s = sent
+        return (desired or {}), float(sched_s)
+    return sent, 0.0
+
+
+def event_stream(jobs: List[Job], cluster: Cluster,
+                 round_len: float = 360.0, max_events: int = 500000,
+                 restart_penalty: float = RESTART_PENALTY,
+                 sanitize: bool = None,
+                 faults=None,
+                 checkpoint_interval: Optional[float] = None,
+                 stable: bool = False,
+                 name: str = "external"):
+    """Step-driven co-routine mode of the continuous-time engine.
+
+    A generator that runs the exact ``simulate_events`` transition
+    kernel but *yields* a :class:`ConsultPoint` at every scheduling
+    decision instead of calling a scheduler object; the caller
+    ``send()``s the desired allocation map back (see
+    :class:`ConsultPoint`).  ``simulate_events`` itself is a thin
+    driver over this generator, so an external policy stepping the
+    stream — e.g. through ``repro.env.ClusterSchedulingEnv`` — replays
+    the same decisions bitwise.
+
+    ``stable`` mirrors ``Scheduler.stable_when_idle``: when False the
+    stream re-consults on a ``round_len`` quantum while any job is
+    active; when True only while some active job is unallocated.
+    ``name`` labels the returned :class:`EventSimResult`.
+
+    Returns the result via ``StopIteration.value``.
+    """
     _ob = _obs.get()
     _san = _inv.sanitize_enabled(sanitize)
     cap = _cap_by_key(cluster) if _san else None
@@ -380,7 +414,19 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     _reset_jobs(jobs)
     by_id = {j.job_id: j for j in jobs}
-    stable = getattr(scheduler, "stable_when_idle", False)
+    # permanent-infeasibility guard (mirrors the HadarE adapter): a job
+    # demanding more devices than the whole cluster has of its eligible
+    # types can never be placed by any policy, so it must not keep the
+    # re-schedule quantum alive — the run would spin to max_events.
+    # Such jobs end with finish_time=None (completed < n_jobs).
+    cap_type: Dict[str, int] = {}
+    for n in cluster.nodes:
+        for r, c in n.gpus.items():
+            cap_type[r] = cap_type.get(r, 0) + c
+    never_fit = frozenset(
+        j.job_id for j in jobs if j.n_workers > 0
+        and sum(c for r, c in cap_type.items()
+                if j.throughput.get(r, 0.0) > 0.0) < j.n_workers)
     q = EventQueue(sanitize=_san)
     for j in jobs:
         q.push_arrival(j.arrival, j.job_id)
@@ -403,6 +449,7 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
     prog_start: Dict[int, float] = {}
     prog_done0: Dict[int, float] = {}
     fault_pending: Set[int] = set()   # evicted, owing a fault-restart charge
+    completed_since: List[int] = []   # finished since the last consult
     t = 0.0
     n_events = 0
     sched_calls = 0
@@ -477,6 +524,7 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                 if _ob.enabled:
                     _ob.completion(t, j.job_id, t - j.arrival)
                 any_completed = True
+                completed_since.append(j.job_id)
             elif ev.kind == EventKind.NODE_RECOVER:
                 fs.recover(ev.node_id)
                 cap_changed = True
@@ -493,8 +541,6 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
                 if _ob.enabled:
                     _ob.fault(reason, t, ev.node_id,
                               fs.recover_time(ev.node_id, t))
-        if any_completed and hasattr(scheduler, "note_completion"):
-            scheduler.note_completion()
 
         if fault_hit:
             victims = select_evictions(jobs, fs.live_capacity())
@@ -556,12 +602,18 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
 
         view = fs.view() if fs is not None else cluster
         if view.nodes:
-            qlen = (sum(1 for j in jobs if not j.is_done()
-                        and j.arrival <= t and j.alloc is None)
-                    if _ob.enabled else 0)
-            with _ob.consult("events", scheduler.name, t, qlen) as sw:
-                desired = scheduler.schedule(t, round_len, jobs, view)
-            open_sched_s = sw.seconds
+            qlen = sum(1 for j in jobs if not j.is_done()
+                       and j.arrival <= t and j.alloc is None)
+            sent = yield ConsultPoint(
+                t=t, round_len=round_len, jobs=jobs, view=view,
+                completed=completed_since, queue_len=qlen,
+                down=frozenset(fs.down) if fs is not None else frozenset(),
+                busy_gpu_seconds=recorder.busy_gpu_seconds,
+                avail_gpu_seconds=recorder.avail_gpu_seconds,
+                lost_gpu_seconds=recorder.lost_gpu_seconds,
+                evictions=recorder.evictions)
+            desired, open_sched_s = _parse_action(sent)
+            completed_since = []
             sched_calls += 1
         else:
             desired = {}            # total outage: wait for a recovery
@@ -614,9 +666,74 @@ def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
         # cluster.
         if ((fs is None or fs.any_up())
                 and any(not j.is_done() and j.arrival <= t
+                        and j.job_id not in never_fit
                         and (not stable or j.alloc is None) for j in jobs)):
             q.push_reschedule(t + round_len)
 
     total = max((j.finish_time or t) for j in jobs) if jobs else 0.0
-    return recorder.result(scheduler.name, jobs, total, n_events,
-                           sched_calls)
+    return recorder.result(name, jobs, total, n_events, sched_calls)
+
+
+def simulate_events(scheduler, jobs: List[Job], cluster: Cluster,
+                    round_len: float = 360.0, max_events: int = 500000,
+                    restart_penalty: float = RESTART_PENALTY,
+                    solver: Optional[str] = None,
+                    sanitize: bool = None,
+                    faults=None,
+                    checkpoint_interval: Optional[float] = None
+                    ) -> EventSimResult:
+    """Continuous-time simulation: t jumps to the next event.
+
+    ``round_len`` keeps two roles: the scheduling quantum for schedulers
+    without ``stable_when_idle`` (they are re-consulted every
+    ``round_len`` while jobs are active), and the value passed to
+    ``scheduler.schedule`` so scheduler-side heuristics see the same
+    horizon as in round mode.
+
+    ``solver`` overrides the scheduler's pricing backend (see
+    ``simulate_rounds``).  Schedulers with incremental PriceState (Hadar)
+    price each event step against persistent arrays — no per-consult
+    state rebuild.
+
+    ``faults`` (a ``FailureModel``, ``FailureTrace``, or iterable of
+    windows) injects NODE_FAIL / SPOT_PREEMPT / NODE_RECOVER events at
+    their exact times.  On a failure: every job holding devices on a
+    down node — plus, under shrunken capacity, further victims in
+    reverse payoff order — is evicted, its predicted completion
+    invalidated, and its progress rolled back to the last checkpoint
+    (``checkpoint_interval`` seconds of progress apart; defaults to the
+    model's knob, see ``repro.sim.faults``).  The rolled-back work and
+    the extra restart penalty the job pays when it reallocates are
+    charged as *lost* GPU-seconds, so ``result.goodput()`` <
+    ``result.gru_overall()`` exactly when a fault cost something.
+    Scheduler consults price against the up-capacity view (cached per
+    down-set, so persistent PriceState geometry checks keep hitting).
+
+    Implemented as a driver over :func:`event_stream` (the co-routine
+    form of the same kernel), so a policy stepping the stream directly
+    — or through ``repro.env.ClusterSchedulingEnv`` — makes decisions
+    against byte-identical state.
+    """
+    _apply_solver(scheduler, solver)
+    _ob = _obs.get()
+    gen = event_stream(jobs, cluster, round_len=round_len,
+                       max_events=max_events,
+                       restart_penalty=restart_penalty,
+                       sanitize=sanitize, faults=faults,
+                       checkpoint_interval=checkpoint_interval,
+                       stable=getattr(scheduler, "stable_when_idle",
+                                      False),
+                       name=scheduler.name)
+    send = None
+    while True:
+        try:
+            cp = gen.send(send)
+        except StopIteration as stop:
+            return stop.value
+        if cp.completed and hasattr(scheduler, "note_completion"):
+            scheduler.note_completion()
+        with _ob.consult("events", scheduler.name, cp.t,
+                         cp.queue_len) as sw:
+            desired = scheduler.schedule(cp.t, cp.round_len, cp.jobs,
+                                         cp.view)
+        send = (desired, sw.seconds)

@@ -1,0 +1,316 @@
+"""Classic baselines (repro.env.baselines): differential
+round-vs-event engine agreement within the documented quantization
+tolerance, property-tested over random fig5 traces under
+REPRO_SANITIZE=1; fault-injection invariants (goodput <= GRU,
+down-allocation, no stranded jobs); and the estimator/feasibility
+edge cases, negative tests included."""
+import os
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.analysis.invariants import InvariantViolation
+from repro.core.trace import philly_trace, simulation_cluster
+from repro.core.types import Cluster, Job, Node, clone_jobs
+from repro.env.baselines import (FCFSScheduler, MaxMinShareScheduler,
+                                 SJFScheduler, SRTFScheduler,
+                                 _duration_noise)
+from repro.sim.engine import simulate_events, simulate_rounds
+from repro.sim.faults import FailureModel, FailureTrace, FaultWindow
+
+BASELINES = (
+    FCFSScheduler,
+    SJFScheduler,
+    lambda: SJFScheduler(predicted=True),
+    SRTFScheduler,
+    lambda: SRTFScheduler(predicted=True),
+    MaxMinShareScheduler,
+)
+
+
+class _sanitize_env:
+    """Set REPRO_SANITIZE=1 for a block (fixture-free, @given-safe)."""
+
+    def __enter__(self):
+        self._old = os.environ.get("REPRO_SANITIZE")
+        os.environ["REPRO_SANITIZE"] = "1"
+
+    def __exit__(self, *exc):
+        if self._old is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = self._old
+
+
+# ---------------------------------------------------------------------------
+# differential engine test (satellite: every baseline, both engines)
+# ---------------------------------------------------------------------------
+
+def _assert_engines_agree(factory, jobs, cluster, round_len=360.0):
+    """The documented quantization tolerance (repro.sim.engine module
+    docstring): the event engine reacts to arrivals/completions up to
+    one round earlier per decision on the job's path, so TTD may shift
+    by a couple of rounds, JCT by a few, and utilization by a few
+    percent — anything larger is an engine or baseline bug."""
+    r_round = simulate_rounds(factory(), clone_jobs(jobs), cluster,
+                              round_len=round_len, max_rounds=8000)
+    r_event = simulate_events(factory(), clone_jobs(jobs), cluster,
+                              round_len=round_len)
+    name = r_round.scheduler
+    assert all(j.finish_time is not None for j in r_round.jobs), name
+    assert all(j.finish_time is not None for j in r_event.jobs), name
+    ttd = max(r_round.total_seconds, r_event.total_seconds)
+    assert abs(r_round.total_seconds - r_event.total_seconds) <= \
+        max(2.0 * round_len, 0.02 * ttd) + 1e-6, \
+        (name, r_round.total_seconds, r_event.total_seconds)
+    jct = max(r_round.avg_jct(), r_event.avg_jct())
+    assert abs(r_round.avg_jct() - r_event.avg_jct()) <= \
+        max(3.0 * round_len, 0.05 * jct) + 1e-6, \
+        (name, r_round.avg_jct(), r_event.avg_jct())
+    assert abs(r_round.gru_overall() - r_event.gru_overall()) <= 0.05, \
+        (name, r_round.gru_overall(), r_event.gru_overall())
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 9999), n=st.integers(4, 14),
+       staggered=st.booleans())
+def test_engines_agree_on_random_fig5_traces(seed, n, staggered):
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=n, seed=seed, all_at_start=not staggered)
+    with _sanitize_env():
+        for factory in BASELINES:
+            _assert_engines_agree(factory, jobs, cluster)
+
+
+def test_engines_agree_on_reference_trace():
+    """Non-property anchor on the fig5 reference trace, so a tolerance
+    regression cannot hide behind the shim's random draws."""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=16, seed=0)
+    with _sanitize_env():
+        for factory in BASELINES:
+            _assert_engines_agree(factory, jobs, cluster)
+
+
+def test_baselines_deterministic_replay():
+    """Same trace, fresh scheduler -> bitwise-identical event runs;
+    the predicted variants' misprediction noise is keyed on (seed,
+    job_id), so it replays too."""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=10, seed=6)
+    for factory in BASELINES:
+        a = simulate_events(factory(), clone_jobs(jobs), cluster)
+        b = simulate_events(factory(), clone_jobs(jobs), cluster)
+        assert [j.finish_time for j in a.jobs] == \
+            [j.finish_time for j in b.jobs], a.scheduler
+        assert a.total_seconds == b.total_seconds
+        assert a.gpu_seconds_busy == b.gpu_seconds_busy
+
+
+# ---------------------------------------------------------------------------
+# baselines under faults (satellite: goodput/down-alloc/no stranding)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("factory", [FCFSScheduler, SRTFScheduler])
+def test_baselines_under_failure_trace(factory):
+    """A mid-run node outage evicts, the run keeps the goodput <= GRU
+    and down-allocation invariants (sanitizer enforced), and no job is
+    stranded — everything still completes after recovery."""
+    cluster = Cluster([Node(0, {"v100": 2}), Node(1, {"v100": 2})])
+    jobs = [Job(i, 0.0, 1, 20, 100, {"v100": 1.0}) for i in range(4)]
+    ft = FailureTrace([FaultWindow(0, 300.0, 900.0),
+                       FaultWindow(1, 1500.0, 2000.0)])
+    with _sanitize_env():
+        res = simulate_events(factory(), clone_jobs(jobs), cluster,
+                              faults=ft)
+    assert res.evictions >= 1
+    assert res.gpu_seconds_lost > 0.0
+    assert res.goodput() <= res.gru_overall() + 1e-9
+    assert res.goodput() < res.gru_overall()     # eviction cost is visible
+    assert all(j.finish_time is not None for j in res.jobs)
+    assert all(j.alloc is None for j in res.jobs)
+    assert sum(j.evictions for j in res.jobs) == res.evictions
+
+
+@pytest.mark.parametrize("factory", [FCFSScheduler, SRTFScheduler,
+                                     MaxMinShareScheduler])
+def test_baselines_under_seeded_failure_model(factory):
+    """Generative FailureModel over the fig5 cluster: the run completes
+    with the invariants intact under the sanitizer (which checks gang
+    atomicity, down-allocs, progress bounds and goodput every
+    decision)."""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=10, seed=3)
+    fm = FailureModel(mtbf_hours=6.0, recovery_s=1800.0, seed=7)
+    with _sanitize_env():
+        res = simulate_events(factory(), clone_jobs(jobs), cluster,
+                              faults=fm)
+    assert res.goodput() <= res.gru_overall() + 1e-9
+    assert all(j.finish_time is not None for j in res.jobs)
+    if res.evictions:
+        assert res.gpu_seconds_lost > 0.0
+
+
+def test_total_outage_does_not_strand_jobs():
+    """Every node down at once: progress stalls, nothing is scheduled
+    during the outage, and the trace still drains after recovery."""
+    cluster = Cluster([Node(0, {"v100": 1})])
+    jobs = [Job(0, 0.0, 1, 10, 100, {"v100": 1.0})]
+    ft = FailureTrace([FaultWindow(0, 100.0, 5000.0)])
+    with _sanitize_env():
+        res = simulate_events(SRTFScheduler(), clone_jobs(jobs), cluster,
+                              faults=ft)
+    assert res.jobs[0].finish_time is not None
+    assert res.jobs[0].finish_time > 5000.0
+    assert res.jobs[0].evictions == 1
+
+
+# ---------------------------------------------------------------------------
+# negative tests
+# ---------------------------------------------------------------------------
+
+def test_overallocating_scheduler_trips_sanitizer():
+    class Greedy(FCFSScheduler):
+        name = "greedy"
+
+        def schedule(self, now, round_len, jobs, cluster):
+            # hand every job the same device: violates capacity
+            return {j.job_id: {(0, "v100"): 1} for j in jobs
+                    if not j.is_done() and j.arrival <= now}
+
+    cluster = Cluster([Node(0, {"v100": 1})])
+    jobs = [Job(0, 0.0, 1, 10, 100, {"v100": 1.0}),
+            Job(1, 0.0, 1, 10, 100, {"v100": 1.0})]
+    with _sanitize_env():
+        with pytest.raises(InvariantViolation):
+            simulate_events(Greedy(), clone_jobs(jobs), cluster)
+
+
+def test_partial_gang_trips_sanitizer():
+    """Gang atomicity is an invariant, not a preference: a baseline
+    handing a 2-worker job a single device must be rejected."""
+    class Partial(FCFSScheduler):
+        name = "partial"
+
+        def schedule(self, now, round_len, jobs, cluster):
+            return {j.job_id: {(0, "v100"): 1} for j in jobs
+                    if not j.is_done() and j.arrival <= now}
+
+    cluster = Cluster([Node(0, {"v100": 4})])
+    jobs = [Job(0, 0.0, 2, 10, 100, {"v100": 1.0})]
+    with _sanitize_env():
+        with pytest.raises(InvariantViolation):
+            simulate_events(Partial(), clone_jobs(jobs), cluster)
+
+
+def test_never_fitting_job_does_not_wedge_fcfs():
+    """A job demanding more devices than the cluster owns is skipped by
+    FCFS (_can_ever_fit) instead of head-of-line blocking forever, and
+    the engine's permanent-infeasibility guard ends the run instead of
+    spinning to max_events."""
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=6, seed=2)
+    jobs[2].n_workers = 10 ** 4
+    with _sanitize_env():
+        res = simulate_events(FCFSScheduler(), clone_jobs(jobs), cluster)
+    done = [j for j in res.jobs if j.finish_time is not None]
+    assert len(done) == 5
+    assert len(res.rounds) < 100        # no max_events crawl
+    assert res.total_seconds == max(j.finish_time for j in done)
+
+
+def test_zero_worker_jobs_ignored():
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=6, seed=1)
+    jobs[2].n_workers = 0
+    out = FCFSScheduler().schedule(0.0, 360.0, jobs, cluster)
+    assert jobs[2].job_id not in out
+    out = SRTFScheduler().schedule(0.0, 360.0, jobs, cluster)
+    assert jobs[2].job_id not in out
+
+
+# ---------------------------------------------------------------------------
+# estimator / policy shape
+# ---------------------------------------------------------------------------
+
+def test_duration_noise_deterministic_and_seed_sensitive():
+    assert _duration_noise(7, 0, 0.35) == _duration_noise(7, 0, 0.35)
+    assert _duration_noise(7, 0, 0.35) != _duration_noise(7, 1, 0.35)
+    assert _duration_noise(7, 0, 0.35) != _duration_noise(8, 0, 0.35)
+    assert _duration_noise(7, 0, 0.0) == 1.0    # sigma=0: oracle
+
+
+def test_predicted_names_and_oracle_equivalence():
+    assert SJFScheduler().name == "sjf"
+    assert SJFScheduler(predicted=True).name == "sjf_pred"
+    assert SRTFScheduler().name == "srtf"
+    assert SRTFScheduler(predicted=True).name == "srtf_pred"
+    # sigma=0 predicted == oracle decisions
+    cluster = simulation_cluster()
+    jobs = philly_trace(n_jobs=8, seed=4)
+    a = simulate_events(SJFScheduler(), clone_jobs(jobs), cluster)
+    b = simulate_events(SJFScheduler(predicted=True, sigma=0.0),
+                        clone_jobs(jobs), cluster)
+    assert [j.finish_time for j in a.jobs] == \
+        [j.finish_time for j in b.jobs]
+
+
+def test_blind_gang_is_heterogeneity_blind():
+    """The placement pays the Eq. 1b bottleneck: with a full fast node
+    and an emptier slow node, the blind policy consolidates on free
+    count, not device speed — and a mixed gang runs at the *slow*
+    rate."""
+    cluster = Cluster([Node(0, {"a100": 1}), Node(1, {"k80": 4})])
+    job = Job(0, 0.0, 2, 10, 100, {"a100": 4.0, "k80": 1.0})
+    out = FCFSScheduler().schedule(0.0, 360.0, [job], cluster)
+    alloc = out[0]
+    # fullest cell first: both workers land on the k80 node
+    assert alloc == {(1, "k80"): 2}
+    assert job.bottleneck_rate(alloc) == 1.0
+
+
+def test_srtf_preempts_for_shorter_job():
+    """A long job running alone is preempted when a short job arrives
+    on a one-device cluster — the defining SRTF behaviour."""
+    cluster = Cluster([Node(0, {"v100": 1})])
+    long_j = Job(0, 0.0, 1, 100, 100, {"v100": 1.0})
+    short_j = Job(1, 50.0, 1, 1, 100, {"v100": 1.0})
+    res = simulate_events(SRTFScheduler(), clone_jobs([long_j, short_j]),
+                          cluster)
+    by_id = {j.job_id: j for j in res.jobs}
+    assert by_id[1].finish_time < by_id[0].finish_time
+    # solo runtime is 10 s penalty + 10000 s of work; anything beyond
+    # proves the long job was actually preempted and later resumed
+    assert by_id[0].finish_time > 10010.0 + by_id[1].finish_time - 50.0
+
+
+def test_fcfs_head_of_line_blocks_but_sjf_does_not():
+    """FCFS strict FIFO: a big head job that currently doesn't fit
+    blocks a later small job; SJF admits the small one instead."""
+    cluster = Cluster([Node(0, {"v100": 4})])
+    running = Job(0, 0.0, 3, 50, 100, {"v100": 1.0})
+    big = Job(1, 10.0, 4, 10, 100, {"v100": 1.0})
+    small = Job(2, 20.0, 1, 1, 100, {"v100": 1.0})
+    jobs = [running, big, small]
+    f_out = FCFSScheduler().schedule(0.0, 360.0, jobs, cluster)
+    assert set(f_out) == {0}
+    # at t=30 all three are active; FCFS blocks on big, SJF backfills
+    running.alloc = f_out[0]
+    f_out2 = FCFSScheduler().schedule(30.0, 360.0, jobs, cluster)
+    assert set(f_out2) == {0}
+    s_out = SJFScheduler().schedule(30.0, 360.0, jobs, cluster)
+    assert set(s_out) == {0, 2}
+    running.alloc = None
+
+
+def test_maxmin_orders_by_attained_service():
+    cluster = Cluster([Node(0, {"v100": 1})])
+    a = Job(0, 0.0, 1, 100, 100, {"v100": 1.0})
+    b = Job(1, 0.0, 1, 100, 100, {"v100": 1.0})
+    a.attained_service = 1000.0
+    out = MaxMinShareScheduler().schedule(0.0, 360.0, [a, b], cluster)
+    assert set(out) == {1}              # least-served job gets the device
